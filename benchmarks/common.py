@@ -1,0 +1,32 @@
+"""Shared helpers for the benchmark harness.
+
+Benchmarks run on the single CPU device (never set the 512-device flag
+here).  Wall-clock numbers are for THIS host (XLA:CPU); mesh-scale numbers
+are *derived* via the measured-cost model + the roofline artifacts, and are
+labelled as such in the CSV (`derived` column).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-N wall time in seconds (compiled path)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,52 @@
+"""§Roofline table generator: reads the dry-run artifacts under
+experiments/dryrun/ and emits the per-(arch × shape × mesh) three-term
+roofline rows (also consumed to build EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+RESULT_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "experiments",
+    "dryrun"))
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for fp in sorted(glob.glob(os.path.join(RESULT_DIR, mesh, "*.json"))):
+        with open(fp) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[str]:
+    rows = []
+    for mesh in ("single", "multi"):
+        for c in load_cells(mesh):
+            tag = f"roofline/{mesh}/{c['arch']}/{c['shape']}"
+            if c.get("skipped"):
+                rows.append(csv_row(tag + "/skipped", 0,
+                                    derived=c["skipped"][:40]))
+                continue
+            if not c.get("ok"):
+                rows.append(csv_row(tag + "/failed", 0,
+                                    derived=c.get("error", "?")[:60]))
+                continue
+            r = c["roofline"]
+            dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            rows.append(csv_row(
+                tag, dom_s * 1e6,
+                derived=(f"dom={r['dominant']} c={r['compute_s']:.4f} "
+                         f"m={r['memory_s']:.4f} x={r['collective_s']:.4f} "
+                         f"useful={r['useful_ratio']:.2f} "
+                         f"hbm={c['hbm_utilization']:.2f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,42 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benches
+    PYTHONPATH=src python -m benchmarks.run step_time  # one bench
+
+Prints ``name,us_per_call,derived`` CSV.  Wall-clock rows are measured on
+this host (XLA:CPU, 1 device); mesh-scale rows are derived from the measured
+cost model / dry-run artifacts and say so in ``derived``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (batching, breakdown, load_balance_bench,
+                            roofline_table, step_time)
+    suites = {
+        "step_time": step_time.run,          # Table 1 / Fig 8
+        "breakdown": breakdown.run,          # Table 2
+        "batching": batching.run,            # Fig 7
+        "load_balance": load_balance_bench.run,   # §3.4
+        "roofline": roofline_table.run,      # §Roofline (from dry-run)
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in want:
+        try:
+            for row in suites[name]():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001 — report per-suite, keep going
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the three-line DMuon API (paper Fig. 1a) on a tiny LM.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced smollm config, dedicates parameters, trains 20 steps with
+owner-centric DMuon and prints the loss curve.
+"""
+
+import jax
+
+from repro import configs
+from repro.core import api                              # the drop-in module
+from repro.core.muon import MuonConfig
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.models import model_fns
+from repro.train.step import init_state, make_train_step
+
+
+def main():
+    cfg = configs.get("smollm-360m", reduced=True)
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+
+    # --- the paper's three lines -----------------------------------------
+    plan = api.dedicate_params(shapes)                  # 1. dedicate
+    opt = api.Muon(plan, config=MuonConfig(             # 2. construct
+        learning_rate=0.02, momentum=0.95))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))  # 3. init / update
+    # ----------------------------------------------------------------------
+
+    print(f"matrices under Muon: {plan.stats['num_matrices']} in "
+          f"{plan.stats['num_groups']} groups; "
+          f"{plan.stats['num_adamw_leaves']} AdamW leaves")
+
+    step = make_train_step(cfg, opt, donate=False)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    for i in range(20):
+        state = step(state, batch_for_step(dcfg, i))
+        if i % 5 == 4:
+            print(f"step {int(state.step):3d}  loss_ema "
+                  f"{float(state.loss_ema):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Shard-aware checkpointing with atomic commit, rotation, async save and
+elastic restore (fault-tolerance substrate; DESIGN.md §7).
+
+Layout of one checkpoint:
+
+    <dir>/step_000123.tmp/          # written first
+        manifest.json               # tree structure, shapes, dtypes
+        <leaf-hash>.shard<i>.npz    # per-process addressable shards with
+                                    # their global index slices
+    <dir>/step_000123/              # atomic os.replace commit
+
+Restore reassembles each logical array from shard files and re-shards onto
+the *current* mesh — the device count / topology may differ from save time
+(elastic restart after node failure).  On a single-process CPU container the
+shard set is simply the full array; the format is identical.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _path_str(kp) -> str:
+    out = []
+    for k in kp:
+        for attr in ("key", "idx", "name"):
+            if hasattr(k, attr):
+                out.append(str(getattr(k, attr)))
+                break
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def _leaf_file(path: str) -> str:
+    h = hashlib.sha1(path.encode()).hexdigest()[:16]
+    return f"leaf_{h}"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree: Any, *, block: bool = False) -> None:
+        """Snapshot to host memory synchronously, write/commit (maybe async)."""
+        host = []
+        flat = jax.tree_util.tree_leaves_with_path(tree)
+        manifest = {"step": step, "leaves": {}}
+        for kp, leaf in flat:
+            path = _path_str(kp)
+            if leaf is None:
+                manifest["leaves"][path] = {"none": True}
+                continue
+            arr = jax.device_get(leaf)  # gathers addressable shards
+            manifest["leaves"][path] = {
+                "shape": list(np.shape(arr)),
+                "dtype": str(np.asarray(arr).dtype),
+                "file": _leaf_file(path),
+            }
+            host.append((path, np.asarray(arr)))
+        # structure for exact pytree round-trip (pickle: proto serialization
+        # rejects user-defined nodes like the MuonState NamedTuple)
+        import pickle
+        manifest["treedef"] = pickle.dumps(
+            jax.tree_util.tree_structure(tree)).hex()
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            for path, arr in host:
+                np.savez(os.path.join(
+                    tmp, manifest["leaves"][path]["file"] + ".shard0.npz"),
+                    data=arr,
+                    index=np.asarray([[0, s] for s in arr.shape]))
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)           # atomic commit
+            self._rotate()
+
+        if self.async_save and not block:
+            self.wait()                       # one in-flight save at a time
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and not name.endswith(".tmp"):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, like: Any = None,
+                shard_fn: Optional[Callable[[str, np.ndarray], Any]] = None
+                ) -> Any:
+        """Rebuild the pytree saved at ``step`` (default: latest).
+
+        ``like``: optional pytree of the same structure whose shardings the
+        restored arrays adopt (elastic restore onto the *current* mesh).
+        ``shard_fn(path, array)`` overrides placement per leaf.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        import pickle
+        treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+
+        like_leaves = (jax.tree_util.tree_leaves_with_path(like)
+                       if like is not None else None)
+        like_map = ({_path_str(kp): l for kp, l in like_leaves}
+                    if like_leaves else {})
+
+        leaves = []
+        for path in _manifest_paths_in_order(manifest, treedef):
+            meta = manifest["leaves"][path]
+            if meta.get("none"):
+                leaves.append(None)
+                continue
+            arr = _assemble(d, meta)
+            if shard_fn is not None:
+                leaves.append(shard_fn(path, arr))
+            elif path in like_map and hasattr(like_map[path], "sharding"):
+                leaves.append(jax.device_put(arr, like_map[path].sharding))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _assemble(d: str, meta: dict) -> np.ndarray:
+    """Reassemble a logical array from its shard files."""
+    shape = tuple(meta["shape"])
+    out = None
+    i = 0
+    while True:
+        fp = os.path.join(d, f"{meta['file']}.shard{i}.npz")
+        if not os.path.exists(fp):
+            break
+        with np.load(fp) as z:
+            data, index = z["data"], z["index"]
+        if i == 0 and tuple(data.shape) == shape:
+            return data.astype(meta["dtype"])
+        if out is None:
+            out = np.zeros(shape, dtype=meta["dtype"])
+        sl = tuple(slice(int(a), int(a) + int(b)) for a, b in index)
+        out[sl] = data
+        i += 1
+    if out is None:
+        raise FileNotFoundError(fp)
+    return out
+
+
+def _manifest_paths_in_order(manifest: dict, treedef):
+    """Leaf paths in treedef order (manifest dict preserves insertion order,
+    which matches tree_leaves_with_path order at save time)."""
+    return list(manifest["leaves"].keys())

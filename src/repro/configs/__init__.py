@@ -1,0 +1,25 @@
+"""Architecture registry: the 10 assigned architectures (+ paper workload
+analogue via smollm for the end-to-end example).
+
+Usage:  cfg = configs.get("qwen2.5-14b")          # full (dry-run only)
+        cfg = configs.get("qwen2.5-14b", reduced=True)   # CPU smoke tests
+"""
+
+from repro.configs import (deepseek_v3_671b, hymba_1p5b, kimi_k2_1t,
+                           llava_next_mistral_7b, nemotron4_340b,
+                           qwen2p5_14b, seamless_m4t_v2, smollm_360m,
+                           stablelm_1p6b, xlstm_350m)
+
+_MODULES = (hymba_1p5b, qwen2p5_14b, nemotron4_340b, smollm_360m,
+            stablelm_1p6b, deepseek_v3_671b, kimi_k2_1t, xlstm_350m,
+            seamless_m4t_v2, llava_next_mistral_7b)
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get(arch_id: str, reduced: bool = False, **overrides):
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    m = REGISTRY[arch_id]
+    return (m.reduced if reduced else m.config)(**overrides)

@@ -1,0 +1,8 @@
+"""DMuon core: the paper's contribution as a composable JAX module.
+
+Layers:
+  coefficients / newton_schulz / gram_ns — the optimizer math
+  dedication / layout / load_balance     — owner planning (paper §3.1/3.2.1/3.4)
+  distributed                            — owner-centric SPMD execution (§3.2/3.5)
+  muon / api                             — drop-in optimizer surface (§4)
+"""

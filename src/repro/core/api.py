@@ -1,0 +1,134 @@
+"""Drop-in user surface (paper Fig. 1a):
+
+    import repro.core.api as dmuon
+    plan = dmuon.dedicate_params(params, mesh=mesh)
+    opt  = dmuon.Muon(plan, learning_rate=0.02)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+
+The optimizer follows the optax GradientTransformation protocol (init/update
+returning update *deltas*), so it composes with any JAX training loop without
+framework-level modifications — the drop-in property the paper claims for the
+PyTorch optimizer protocol, transplanted to the JAX convention.  State-dict
+accessors round-trip through the checkpoint manager (repro.checkpoint).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core import dedication
+from repro.core.dedication import DedicationPlan, default_muon_predicate
+from repro.core.gram_ns import GramNSConfig
+from repro.core.muon import (MuonConfig, MuonState, muon_init, muon_update)
+
+__all__ = ["dedicate_params", "Muon", "MuonConfig", "GramNSConfig",
+           "DedicationPlan", "default_muon_predicate"]
+
+
+def dedicate_params(params, mesh=None, *, num_owners: Optional[int] = None,
+                    strategy: str = "load_balance",
+                    owner_axes: Tuple[str, ...] = (), **kw) -> DedicationPlan:
+    """Plan ownership for ``params`` over ``mesh`` (or ``num_owners`` slots).
+
+    With a mesh, the owner axis is the flattened mesh (all axes by default;
+    restrict with ``owner_axes``) and the XOR slot layout uses the two
+    outermost axes as (rows, cols).
+    """
+    if mesh is not None:
+        axes = owner_axes or tuple(mesh.axis_names)
+        sizes = [mesh.shape[a] for a in axes]
+        num_owners = int(np.prod(sizes))
+        cols = sizes[-1]
+        rows = num_owners // cols
+        kw.setdefault("mesh_rows", rows)
+        kw.setdefault("mesh_cols", cols)
+    elif num_owners is None:
+        num_owners = 1
+    return dedication.dedicate_params(
+        params, num_owners=num_owners, strategy=strategy,
+        owner_axes=owner_axes, **kw)
+
+
+class Muon:
+    """Optax-style optimizer implementing the DMuon training step (Alg. 1)."""
+
+    def __init__(self, plan: DedicationPlan, mesh=None,
+                 config: Optional[MuonConfig] = None, **overrides):
+        self.plan = plan
+        self.mesh = mesh
+        cfg = config or MuonConfig()
+        if overrides:
+            cfg = replace(cfg, **overrides)
+        self.config = cfg
+
+    def init(self, params) -> MuonState:
+        return muon_init(self.plan, params, self.config, self.mesh)
+
+    def update(self, grads, state: MuonState, params):
+        return muon_update(self.plan, grads, state, params, self.config,
+                           self.mesh)
+
+    # state-dict accessors (paper §4: "the state-dict accessors")
+    def state_dict(self, state: MuonState) -> dict:
+        return {"step": state.step, "momentum": state.momentum,
+                "adamw_mu": state.adamw.mu, "adamw_nu": state.adamw.nu,
+                "error_feedback": state.error_feedback}
+
+    def load_state_dict(self, d: dict) -> MuonState:
+        from repro.core.muon import AdamWState
+        return MuonState(step=d["step"], momentum=d["momentum"],
+                         adamw=AdamWState(d["adamw_mu"], d["adamw_nu"]),
+                         error_feedback=d.get("error_feedback"))
+
+
+def reshard_owner_state(state, old_plan: DedicationPlan,
+                        new_plan: DedicationPlan, new_mesh=None):
+    """Elastic restart across owner counts (fault-tolerance substrate).
+
+    Owner-layout momentum buffers are padded to ``D·cap`` rows, so a
+    checkpoint taken at D owners cannot be loaded verbatim onto D′ owners
+    after a node failure.  This unpacks each group's momentum to its logical
+    (count, m, n) rows under the OLD plan and repacks/pads it under the NEW
+    plan — semantics are exactly preserved (the pad rows are zeros and never
+    consumed).  AdamW moments and error feedback are training-layout pytrees
+    and reshard by placement alone.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.muon import (MuonState, _group_key_str, owner_sharding)
+
+    new_momentum = {}
+    shard = owner_sharding(new_plan, new_mesh)
+    for key, old_g in old_plan.groups.items():
+        new_g = new_plan.groups[key]
+        assert old_g.count == new_g.count, (key, old_g.count, new_g.count)
+        buf = state.momentum[_group_key_str(key)]
+        # unpack logical rows under the old plan
+        if np.array_equal(old_g.unpack_index, np.arange(old_g.count)):
+            rows = buf[:old_g.count]
+        else:
+            rows = jnp.take(buf, jnp.asarray(old_g.unpack_index), axis=0)
+        # repack under the new plan
+        n_pad = new_g.packed_size - new_g.count
+        if np.array_equal(new_g.pack_index[:new_g.count],
+                          np.arange(new_g.count)):
+            packed = rows if n_pad == 0 else jnp.concatenate(
+                [rows, jnp.zeros((n_pad,) + rows.shape[1:], rows.dtype)], 0)
+        else:
+            ext = jnp.concatenate(
+                [rows, jnp.zeros((1,) + rows.shape[1:], rows.dtype)], 0)
+            idx = np.where(new_g.pack_index < 0, new_g.count,
+                           new_g.pack_index)
+            packed = jnp.take(ext, jnp.asarray(idx), axis=0)
+        if shard is not None:
+            packed = jax.device_put(packed, shard)
+        new_momentum[_group_key_str(key)] = packed
+    return MuonState(step=state.step, momentum=new_momentum,
+                     adamw=state.adamw,
+                     error_feedback=state.error_feedback)

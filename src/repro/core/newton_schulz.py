@@ -1,0 +1,83 @@
+"""Standard (non-Gram) Newton-Schulz orthogonalization.
+
+This is the compute path of the gather-then-compute baseline (``Muon-AG`` in
+the paper): every rank materializes the full momentum matrix and runs the
+iteration below.  It is also the semantic oracle for the Gram-space path in
+``gram_ns.py`` — the two must agree to within iteration-reordering rounding.
+
+The iteration approximates the matrix sign / polar factor ``UVᵀ`` of the
+SVD ``M = UΣVᵀ``:
+
+    X₀ = M / ||M||_F
+    X_{i+1} = a X_i + (b A_i + c A_i²) X_i,   A_i = X_i X_iᵀ          (Eq. 2)
+
+All matmuls accumulate in fp32 (``preferred_element_type``) regardless of the
+working dtype; on TPU the working dtype is bf16 by default (see DESIGN.md §2
+for the fp16→bf16 adaptation note).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coefficients import Coeffs, get_coefficients
+
+_EPS = 1e-7
+
+
+def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched matmul over the last two dims with fp32 accumulation."""
+    return jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((a.ndim - 1,), (b.ndim - 2,)),
+                           (tuple(range(a.ndim - 2)), tuple(range(b.ndim - 2)))),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+def newton_schulz(
+    m: jax.Array,
+    *,
+    num_steps: int = 5,
+    schedule: str | Sequence[Coeffs] = "polar_express",
+    compute_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Orthogonalize ``m`` (shape ``(..., r, c)``) via standard Newton-Schulz.
+
+    Handles tall matrices by transposing so the iteration runs on the smaller
+    Gram side, exactly as reference Muon implementations do.  Returns an array
+    of the same shape and dtype as ``m``.
+    """
+    if m.ndim < 2:
+        raise ValueError(f"newton_schulz expects a matrix, got shape {m.shape}")
+    coeffs = (get_coefficients(schedule, num_steps)
+              if isinstance(schedule, str) else tuple(schedule)[:num_steps])
+
+    out_dtype = m.dtype
+    cdtype = compute_dtype or jnp.float32
+    x = m.astype(jnp.float32)
+
+    transposed = m.shape[-2] > m.shape[-1]
+    if transposed:
+        x = x.mT
+
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    x = (x / (norm + _EPS)).astype(cdtype)
+
+    for a, b, c in coeffs:
+        g = _dot(x, x.mT)                      # A = X Xᵀ      (r² c flops)
+        poly = b * g + c * _dot(g, g)          # bA + cA²      (r³)
+        x = a * x + _dot(poly, x)              # aX + (·)X     (r² c)
+
+    if transposed:
+        x = x.mT
+    return x.astype(out_dtype)
+
+
+def msign_svd(m: jax.Array) -> jax.Array:
+    """Exact polar factor UVᵀ via SVD — test oracle only (not used in training)."""
+    u, _, vt = jnp.linalg.svd(m.astype(jnp.float32), full_matrices=False)
+    return (u @ vt).astype(m.dtype)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the DMuon Gram Newton-Schulz execution stack.
+
+Modules:
+  symmul     — batched symmetric-output matmul, lower-triangle compute,
+               fused polynomial epilogue (the paper's "symmetric Gram kernel")
+  gram_syrk  — batched G = X Xᵀ, lower-triangle compute
+  ops        — public jit'd wrappers (mirror epilogue, autotune dispatch)
+  ref        — pure-jnp oracles used by tests and by the CPU/dry-run path
+  autotune   — block-shape search + persistent cache (paper Fig. 6)
+"""
+
+from repro.kernels import autotune, ops, ref  # noqa: F401

@@ -1,0 +1,183 @@
+"""Shape-adaptive kernel autotuning with a persistent cache (paper §3.3, Fig. 6).
+
+The paper's workflow: expand a search space of tile/block/pipeline configs per
+workload shape, benchmark candidates on the target hardware, cache the winner
+keyed by problem shape + execution mode, and dispatch cached configs on later
+invocations.  The TPU analogue of tile/warp scheduling is BlockSpec block
+shapes under a VMEM budget with MXU-aligned (multiples of 128 where possible)
+dimensions — that is the space searched here.
+
+Two measurement backends:
+  * ``measured``   — wall-time the public op (interpret mode on this CPU-only
+    container; on a real TPU the same code path times the compiled kernel).
+  * ``analytical`` — a TPU roofline scorer (VMEM-resident working set, MXU
+    utilization of the block shape, grid overhead) used by the dry-run where
+    nothing executes.  This mirrors how the measured-cost load balancer
+    (core/load_balance.py) also accepts analytic costs on non-TPU hosts.
+
+The cache is a JSON file keyed by (mode, m, k, dtype); model parameter shapes
+are fixed for a whole training run, so tuning cost is paid once (paper: "the
+same parameter shapes recur throughout training").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Iterable, Optional
+
+_DEFAULT_CACHE = os.environ.get(
+    "DMUON_AUTOTUNE_CACHE",
+    os.path.join(os.path.expanduser("~"), ".cache", "dmuon", "autotune.json"))
+
+_VMEM_BYTES = 16 * 1024 * 1024   # per-core VMEM budget (v5e class)
+_VMEM_FRACTION = 0.5             # leave room for pipelining double-buffers
+_MXU = 128                       # MXU systolic dimension
+
+_lock = threading.Lock()
+_memory_cache: dict[str, tuple[int, int]] = {}
+_loaded_paths: set[str] = set()
+
+
+def _key(mode: str, m: int, k: int, dtype: str) -> str:
+    return f"{mode}:{m}x{k}:{dtype}"
+
+
+def _load(path: str) -> None:
+    if path in _loaded_paths:
+        return
+    _loaded_paths.add(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        for k, v in data.items():
+            _memory_cache.setdefault(k, (int(v[0]), int(v[1])))
+    except (OSError, ValueError):
+        pass
+
+
+def _save(path: str) -> None:
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({k: list(v) for k, v in _memory_cache.items()}, f)
+        os.replace(tmp, path)
+    except OSError:
+        pass
+
+
+def candidate_blocks(m: int, k: int, dtype_bytes: int = 4
+                     ) -> Iterable[tuple[int, int]]:
+    """Feasible (block_m, block_k) candidates under the VMEM budget.
+
+    Working set per grid step: A (bm×bk) + B (bk×bm) + out/acc (bm×bm),
+    double-buffered inputs.  Blocks are MXU-aligned when the problem allows.
+    """
+    budget = _VMEM_BYTES * _VMEM_FRACTION
+    sizes = [s for s in (64, 128, 256, 512, 1024) if s <= max(m, _MXU)]
+    if m < 64:
+        sizes = [m]
+    out = []
+    for bm in sizes:
+        for bk in sizes:
+            if bm > m or bk > max(m, k):
+                continue
+            ws = (2 * (bm * bk + bk * bm) + 2 * bm * bm) * dtype_bytes
+            if ws <= budget:
+                out.append((bm, bk))
+    return out or [(min(m, 128), min(max(m, k), 128))]
+
+
+def analytical_score(bm: int, bk: int, m: int, k: int,
+                     dtype_bytes: int = 4) -> float:
+    """Lower is better.  Models MXU alignment waste + grid dispatch overhead
+    + accumulator residency, the TPU counterparts of the paper's tile/pipeline
+    search dimensions."""
+    pad_m = -m % bm
+    pad_k = -k % bk
+    waste = ((m + pad_m) * (k + pad_k)) / float(m * k)      # padded FLOP ratio
+    align = 1.0 if (bm % _MXU == 0 and bk % _MXU == 0) else 1.3
+    nb = (m + bm - 1) // bm
+    steps = (nb * (nb + 1) // 2) * ((k + bk - 1) // bk)     # triangular grid
+    dispatch = 1.0 + 5e-4 * steps                            # per-step overhead
+    # small blocks underfill the MXU; huge blocks limit pipelining overlap
+    fill = max(_MXU / bm, 1.0) * max(_MXU / bk, 1.0)
+    return waste * align * dispatch * fill
+
+
+def tune(mode: str, m: int, k: int, dtype: str = "float32", *,
+         backend: str = "analytical", batch: int = 1,
+         measure_fn=None, cache_path: str = _DEFAULT_CACHE
+         ) -> tuple[int, int]:
+    """Search candidates and cache the winner.
+
+    ``measure_fn(bm, bk) -> seconds`` overrides the scorer (the CPU test
+    harness and, on real hardware, the TPU timer plug in here).
+    """
+    key = _key(mode, m, k, dtype)
+    with _lock:
+        _load(cache_path)
+        if key in _memory_cache:
+            return _memory_cache[key]
+
+    dtype_bytes = 2 if dtype in ("bfloat16", "float16") else 4
+    best, best_score = None, float("inf")
+    for bm, bk in candidate_blocks(m, k, dtype_bytes):
+        if measure_fn is not None:
+            score = measure_fn(bm, bk)
+        elif backend == "analytical":
+            score = analytical_score(bm, bk, m, k, dtype_bytes)
+        else:
+            score = _measure_wall(mode, bm, bk, m, k, dtype, batch)
+        if score < best_score:
+            best, best_score = (bm, bk), score
+
+    with _lock:
+        _memory_cache[key] = best
+        _save(cache_path)
+    return best
+
+
+def _measure_wall(mode: str, bm: int, bk: int, m: int, k: int,
+                  dtype: str, batch: int) -> float:
+    """Wall-time the public op (interpret mode on CPU; compiled on TPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = jax.random.PRNGKey(0)
+    if mode == "syrk":
+        x = jax.random.normal(rng, (batch, m, k), dtype=jnp.dtype(dtype))
+        fn = lambda: ops.syrk(x, block_m=bm, block_k=bk)
+    elif mode == "gram_poly":
+        g = jax.random.normal(rng, (batch, m, m), dtype=jnp.dtype(dtype))
+        g = (g + g.mT) / 2
+        fn = lambda: ops.gram_poly(g, 3.0, -4.0, 2.0, block_m=bm, block_k=bk)
+    else:
+        a = jax.random.normal(rng, (batch, m, m), dtype=jnp.dtype(dtype))
+        a = (a + a.mT) / 2
+        fn = lambda: ops.symmul(a, a, block_m=bm, block_k=bk)
+    fn().block_until_ready()  # compile / warm
+    t0 = time.perf_counter()
+    fn().block_until_ready()
+    return time.perf_counter() - t0
+
+
+def lookup(mode: str, m: int, k: int, dtype: str,
+           cache_path: str = _DEFAULT_CACHE) -> tuple[int, int]:
+    """Cache hit or analytic tune — never measures (safe inside jit tracing)."""
+    key = _key(mode, m, k, dtype)
+    with _lock:
+        _load(cache_path)
+        hit = _memory_cache.get(key)
+    if hit is not None:
+        return hit
+    return tune(mode, m, k, dtype, backend="analytical", cache_path=cache_path)
+
+
+def clear_memory_cache() -> None:
+    with _lock:
+        _memory_cache.clear()
+        _loaded_paths.clear()

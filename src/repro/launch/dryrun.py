@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell on the production meshes and record
+memory_analysis / cost_analysis / collective schedule for §Dry-run and
+§Roofline.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init).  Do not set this flag anywhere global — smoke tests
+and benches see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape train_4k --mesh single --opt owner
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>__<opt>.json,
+one file per cell, written incrementally (reruns skip finished cells unless
+--force).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, cell_supported, input_specs
+from repro.core import api
+from repro.core.gram_ns import GramNSConfig, gram_ns_flops
+from repro.core.muon import MuonConfig, MuonState, muon_init
+from repro.launch import roofline
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import model_fns, sharding as shard_rules
+from repro.train.step import make_loss_fn
+from repro.train.train_state import TrainState
+
+RESULT_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "../../..", "experiments",
+    "dryrun"))
+
+# Memory policy (DESIGN.md §8): ≥340B configs use ZeRO-3 param sharding and
+# bf16 optimizer math end-to-end.
+BIG_ARCHS = {"nemotron-4-340b", "deepseek-v3-671b", "kimi-k2-1t-a32b"}
+MID_ARCHS = {"qwen2.5-14b", "llava-next-mistral-7b"}
+
+
+def opt_config(arch_id: str, mode: str) -> MuonConfig:
+    if arch_id in BIG_ARCHS:
+        return MuonConfig(mode=mode, momentum_dtype="bfloat16",
+                          pack_dtype="bfloat16",
+                          ns=GramNSConfig(compute_dtype="bfloat16",
+                                          owner_chunk=8))
+    return MuonConfig(mode=mode)
+
+
+def accum_steps(arch_id: str) -> int:
+    # global microbatch stays divisible by DP on both meshes (>= 32)
+    if arch_id in BIG_ARCHS or arch_id in MID_ARCHS:
+        return 8
+    return 4
+
+
+def _sds(tree_shapes, shardings):
+    """ShapeDtypeStructs carrying shardings — lowerable, no allocation."""
+    return jax.tree.map(
+        lambda s, sh: None if s is None
+        else jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes, shardings,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or x is None)
+
+
+def build_train_cell(cfg, arch_id, shape_name, mesh, mode):
+    """Returns (fn, example_args) for one training cell."""
+    m = model_fns(cfg)
+    zero3 = arch_id in BIG_ARCHS
+    param_shapes = jax.eval_shape(partial(m.init, cfg), jax.random.PRNGKey(0))
+    plan = api.dedicate_params(param_shapes, mesh=mesh, strategy="greedy")
+    opt = api.Muon(plan, mesh=mesh, config=opt_config(arch_id, mode))
+
+    pspecs = shard_rules.param_specs(cfg, param_shapes, mesh, zero3=zero3)
+    # per-leaf training specs let pack/unpack stage the owner reshard at
+    # identical stacked shapes (no whole-tensor rematerialization)
+    from repro.core.dedication import _key_str
+    spec_by_path = {}
+    for kp, spec in jax.tree_util.tree_leaves_with_path(
+            pspecs, is_leaf=lambda x: isinstance(x, P)):
+        spec_by_path["/".join(_key_str(k) for k in kp)] = spec
+    plan.train_specs = spec_by_path
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    params_in = _sds(param_shapes, pshard)
+
+    opt_shapes = jax.eval_shape(partial(muon_init, plan, param_shapes,
+                                        opt.config))
+    from repro.train.step import _opt_state_shardings
+    oshard = _opt_state_shardings(opt, opt_shapes, pspecs, mesh)
+    opt_in = _sds(opt_shapes, oshard)
+
+    scalar = NamedSharding(mesh, P())
+    state_in = TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=scalar),
+        params=params_in, opt_state=opt_in,
+        loss_ema=jax.ShapeDtypeStruct((), jnp.float32, sharding=scalar))
+
+    specs = input_specs(cfg, shape_name)
+    ishard = shard_rules.input_shardings(cfg, specs, mesh)
+    # shard the long frame/patch prefix over 'model' too (activations policy)
+    for k in ("frames", "patches"):
+        if k in specs and specs[k].shape[1] % mesh.shape["model"] == 0:
+            bs = shard_rules.batch_spec(mesh, specs[k].shape[0])
+            ishard[k] = NamedSharding(mesh, P(*(tuple(bs) + ("model", None))))
+    batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                        sharding=ishard[k])
+                for k, v in specs.items()}
+
+    from repro.train.step import make_train_step
+    step = make_train_step(
+        cfg, opt, mesh, accum_steps=accum_steps(arch_id), donate=True,
+        grad_specs=pspecs,
+        accum_dtype=jnp.bfloat16 if arch_id in BIG_ARCHS else jnp.float32)
+    return step, (state_in, batch_in), plan
+
+
+def build_serve_cell(cfg, arch_id, shape_name, mesh):
+    """prefill or decode cell; params in serving dtype (bf16)."""
+    m = model_fns(cfg)
+    sp = SHAPES[shape_name]
+    param_shapes = jax.eval_shape(partial(m.init, cfg), jax.random.PRNGKey(0))
+    pspecs = shard_rules.param_specs(cfg, param_shapes, mesh,
+                                     zero3=arch_id in BIG_ARCHS)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    params_in = _sds(param_shapes, pshard)
+
+    specs = input_specs(cfg, shape_name)
+    ishard = shard_rules.input_shardings(cfg, specs, mesh)
+    for k in ("frames", "patches"):
+        if k in specs and specs[k].shape[1] % mesh.shape["model"] == 0:
+            bs = shard_rules.batch_spec(mesh, specs[k].shape[0])
+            ishard[k] = NamedSharding(mesh, P(*(tuple(bs) + ("model", None))))
+    inputs_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=ishard[k])
+                 for k, v in specs.items()}
+
+    from repro.train.serve import decode_fn, make_cache_shapes, prefill_fn
+    if sp.kind == "prefill":
+        def fn(params, inputs):
+            return prefill_fn(cfg, params, inputs["tokens"],
+                              sp.seq_len + (cfg.frontend_len
+                                            if cfg.frontend == "patch" else 0),
+                              **{k: v for k, v in inputs.items()
+                                 if k != "tokens"})
+        return jax.jit(fn), (params_in, inputs_in)
+
+    # decode: one token against a seq_len-deep cache
+    cache_shapes = make_cache_shapes(cfg, sp.global_batch, sp.seq_len)
+    cspecs = shard_rules.cache_specs(cfg, cache_shapes, mesh)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    cache_in = _sds(cache_shapes, cshard)
+
+    def fn(params, token, cache, pos):
+        return decode_fn(cfg, params, token, cache, pos)
+    return (jax.jit(fn, donate_argnums=(2,)),
+            (params_in, inputs_in["token"], cache_in, inputs_in["pos"]))
+
+
+def ns_flops_for_plan(plan, ns_steps: int, num_devices: int):
+    raw = kern = 0.0
+    for key, g in plan.groups.items():
+        m, n = g.key
+        f = gram_ns_flops(m, n, ns_steps, batch=g.packed_size)
+        raw += f["gram_full_gemm"]
+        kern += f["gram_symmetric_kernel"]
+    return raw / num_devices, kern / num_devices
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
+             outdir: str, force: bool = False) -> dict:
+    tag = f"{arch_id}__{shape_name}__{mode}"
+    mesh_dir = os.path.join(outdir, mesh_kind)
+    os.makedirs(mesh_dir, exist_ok=True)
+    out_path = os.path.join(mesh_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    sp = SHAPES[shape_name]
+    serve_dtypes = (dict(param_dtype="bfloat16", compute_dtype="bfloat16")
+                    if sp.kind != "train" else {})
+    cfg = configs.get(arch_id, **serve_dtypes)
+    result = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+              "opt": mode, "kind": sp.kind}
+
+    skip = cell_supported(cfg, shape_name)
+    if skip:
+        result["skipped"] = skip
+        _write(out_path, result)
+        return result
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        ndev = int(np.prod(list(mesh.shape.values())))
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        seq_ax = None
+        if cfg.n_heads % mesh.shape["model"] != 0 and sp.kind != "decode":
+            seq_ax = "model"   # sequence-sharded attention (heads indivisible)
+        if sp.kind == "train":
+            # FSDP/ZeRO-3 discipline: pin activation batch sharding at block
+            # boundaries (lowered under the mesh context).  MoE blocks skip
+            # the pin — it fights the expert-dispatch resharding (§Perf).
+            pin = dp if cfg.moe is None else None
+            cfg = dataclasses.replace(cfg, act_batch_axes=pin,
+                                      act_seq_axis=seq_ax)
+        elif seq_ax is not None:
+            cfg = dataclasses.replace(cfg, act_batch_axes=dp,
+                                      act_seq_axis=seq_ax)
+        t0 = time.time()
+        plan = None
+        if sp.kind == "train":
+            fn, args, plan = build_train_cell(cfg, arch_id, shape_name, mesh,
+                                              mode)
+        else:
+            fn, args = build_serve_cell(cfg, arch_id, shape_name, mesh)
+        t_build = time.time() - t0
+
+        t0 = time.time()
+        with jax.sharding.set_mesh(mesh):
+            lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        with jax.sharding.set_mesh(mesh):
+            compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = roofline.memory_analysis_dict(compiled)
+        hlo = compiled.as_text()
+
+        n_params = cfg.param_count()
+        n_active = cfg.active_param_count()
+        tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+        if sp.kind == "train":
+            model_flops = 6.0 * n_active * tokens / ndev
+        else:
+            model_flops = 2.0 * n_active * tokens / ndev
+        nsr = nsk = 0.0
+        if plan is not None and mode == "owner":
+            nsr, nsk = ns_flops_for_plan(plan, 5, ndev)
+        r = roofline.analyze(compiled, hlo, num_devices=ndev,
+                             model_flops=model_flops,
+                             ns_flops_raw=nsr, ns_flops_kernel=nsk)
+
+        result.update({
+            "ok": True,
+            "num_devices": ndev,
+            "timings_s": {"build": t_build, "lower": t_lower,
+                          "compile": t_compile},
+            "memory_analysis": mem,
+            "hbm_utilization": mem["total_bytes"] / HBM_BYTES,
+            "fits_hbm": mem["total_bytes"] <= HBM_BYTES,
+            "roofline": r.to_dict(),
+            "params": n_params, "active_params": n_active,
+            "tokens_per_step": tokens,
+        })
+        if plan is not None:
+            result["plan_stats"] = plan.stats
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        result.update({"ok": False, "error": repr(e),
+                       "traceback": traceback.format_exc()})
+    _write(out_path, result)
+    return result
+
+
+def _write(path, obj):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--opt", default="owner",
+                    choices=["owner", "gather", "adamw"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--outdir", default=RESULT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    cells = [(a, s, mk) for mk in meshes for a in archs for s in shapes]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mk in cells:
+        t0 = time.time()
+        r = run_cell(a, s, mk, args.opt, args.outdir, force=args.force)
+        dt = time.time() - t0
+        if r.get("skipped"):
+            n_skip += 1
+            status = "SKIP " + r["skipped"][:40]
+        elif r.get("ok"):
+            n_ok += 1
+            ra = r["roofline"]
+            status = (f"ok mem={r['hbm_utilization']:.2f}HBM "
+                      f"dom={ra['dominant']} "
+                      f"c={ra['compute_s']:.4f}s m={ra['memory_s']:.4f}s "
+                      f"x={ra['collective_s']:.4f}s")
+        else:
+            n_fail += 1
+            status = "FAIL " + r.get("error", "?")[:80]
+        print(f"[{mk:6s}] {a:24s} {s:12s} {dt:7.1f}s  {status}",
+              flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

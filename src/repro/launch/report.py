@@ -1,0 +1,117 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+artifacts under experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULT_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "../../..", "experiments",
+    "dryrun"))
+
+ARCH_ORDER = ["hymba-1.5b", "qwen2.5-14b", "nemotron-4-340b", "smollm-360m",
+              "stablelm-1.6b", "deepseek-v3-671b", "kimi-k2-1t-a32b",
+              "xlstm-350m", "seamless-m4t-large-v2", "llava-next-mistral-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh):
+    out = {}
+    for fp in glob.glob(os.path.join(RESULT_DIR, mesh, "*.json")):
+        with open(fp) as f:
+            d = json.load(f)
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh):
+    cells = load(mesh)
+    rows = [f"#### Mesh `{mesh}` "
+            f"({'2×16×16 = 512 chips' if mesh == 'multi' else '16×16 = 256 chips'})",
+            "",
+            "| arch | shape | status | HBM GiB/chip (util) | per-dev GFLOPs | "
+            "coll GiB/dev | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None:
+                continue
+            if d.get("skipped"):
+                rows.append(f"| {a} | {s} | SKIP (sub-quadratic rule) "
+                            f"| — | — | — | — |")
+                continue
+            if not d.get("ok"):
+                rows.append(f"| {a} | {s} | **FAIL** {d.get('error','')[:40]}"
+                            f" | — | — | — | — |")
+                continue
+            r = d["roofline"]
+            mem = d["memory_analysis"]["total_bytes"]
+            util = d["hbm_utilization"]
+            flag = "" if d["fits_hbm"] else " ⚠"
+            rows.append(
+                f"| {a} | {s} | ok | {fmt_bytes(mem)} ({util:.2f}×){flag} | "
+                f"{r['flops']/1e9:.0f} | {r['coll_bytes']/2**30:.1f} | "
+                f"{d['timings_s']['compile']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="single"):
+    cells = load(mesh)
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant"
+            " | MODEL_FLOPS/dev | useful ratio | kernel-adj compute s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None or d.get("skipped") or not d.get("ok"):
+                continue
+            r = d["roofline"]
+            kadj = r.get("kernel_adjusted_compute_s")
+            rows.append(
+                f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+                f" {r['collective_s']:.4f} | **{r['dominant']}** |"
+                f" {r['model_flops']:.3e} | {r['useful_ratio']:.2f} |"
+                f" {kadj:.4f} |" if kadj else
+                f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+                f" {r['collective_s']:.4f} | **{r['dominant']}** |"
+                f" {r['model_flops']:.3e} | {r['useful_ratio']:.2f} | — |")
+    return "\n".join(rows)
+
+
+def summary():
+    out = {}
+    for mesh in ("single", "multi"):
+        cells = load(mesh)
+        ok = sum(1 for d in cells.values() if d.get("ok"))
+        skip = sum(1 for d in cells.values() if d.get("skipped"))
+        fail = len(cells) - ok - skip
+        out[mesh] = (ok, skip, fail, len(cells))
+    return out
+
+
+def main():
+    s = summary()
+    print("## §Dry-run\n")
+    for mesh, (ok, skip, fail, total) in s.items():
+        print(f"- **{mesh}**: {ok} ok, {skip} skipped (assignment rule), "
+              f"{fail} failed, {total} cells")
+    print()
+    for mesh in ("single", "multi"):
+        print(dryrun_table(mesh))
+        print()
+    print("## §Roofline (single-pod baseline, per §Perf hillclimbs)\n")
+    print(roofline_table("single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (peak FLOP/s per chip)
+    memory     = HLO_bytes_accessed   / (HBM bytes/s per chip)
+    collective = collective_bytes     / (ICI bytes/s per chip link)
+
+``compiled.cost_analysis()`` supplies per-device FLOPs and bytes; collective
+bytes are NOT in cost_analysis, so we parse the optimized HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+
+Kernel adjustment: the dry-run lowers the pure-jnp Gram-NS path (Pallas
+grids cannot be lowered on the CPU backend — DESIGN.md §2), so the HLO
+compute term counts full GEMMs for the symmetric products.  On TPU the
+symmetric kernels execute ~half of that; we report both the raw-HLO term and
+the kernel-adjusted term using the analytic model in core/gram_ns.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[512,5120,5120]{2,1,0}  bf16[2,4096]{1,0}
+_SHAPE_RE = re.compile(r"(pred|[a-z]+[0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1,
+                "s8": 1, "u8": 1, "f8": 1,
+                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    for k, v in _DTYPE_BYTES.items():
+        if dtype.startswith(k):
+            return n * v
+    return n * 4
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind collective operand bytes — trip-count-aware (hlo_walker)."""
+    from repro.launch import hlo_walker
+    costs = hlo_walker.analyze_text(hlo_text)
+    out: Dict[str, int] = {k: int(v) for k, v in costs.coll.items()}
+    out["total"] = int(costs.coll_total)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                   # per-device HLO flops
+    hbm_bytes: float               # per-device bytes accessed
+    coll_bytes: float              # per-device collective operand bytes
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0       # 6·N·D (dense) or 6·N_active·D
+    useful_ratio: float = 0.0      # MODEL_FLOPS / HLO_FLOPs
+    kernel_adjusted_compute_s: Optional[float] = None
+    detail: dict = field(default_factory=dict)
+
+    def finalize(self):
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        if self.flops:
+            self.useful_ratio = self.model_flops / self.flops
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, hlo_text: str, *, num_devices: int,
+            model_flops: float = 0.0,
+            ns_flops_raw: float = 0.0,
+            ns_flops_kernel: float = 0.0) -> Roofline:
+    """Build the three-term roofline from a compiled step.
+
+    cost_analysis flops/bytes are per-device under SPMD.  Collective bytes
+    from the HLO are per-device operand sizes already.  ``ns_flops_raw`` /
+    ``ns_flops_kernel``: per-device NS GEMM flops as lowered (full) vs as the
+    Pallas symmetric kernel executes them — compute term is reported both
+    ways.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    # Trip-count-corrected walk: XLA's cost_analysis counts while bodies once
+    # (scan-over-layers would under-report by ~L) — see hlo_walker.py.
+    from repro.launch import hlo_walker
+    walked = hlo_walker.analyze_text(hlo_text)
+    flops = max(raw_flops, walked.flops)
+    nbytes = max(raw_bytes, walked.bytes)
+    coll = {k: v for k, v in walked.coll.items()}
+    coll["total"] = walked.coll_total
+    r = Roofline(flops=flops, hbm_bytes=nbytes,
+                 coll_bytes=float(coll["total"]),
+                 model_flops=model_flops,
+                 detail={"collectives": coll, "num_devices": num_devices,
+                         "raw_cost_analysis": {"flops": raw_flops,
+                                               "bytes": raw_bytes}})
+    r.finalize()
+    if ns_flops_raw and ns_flops_kernel and flops > ns_flops_raw:
+        adj = flops - (ns_flops_raw - ns_flops_kernel)
+        r.kernel_adjusted_compute_s = adj / PEAK_FLOPS_BF16
+    return r
+
+
+def memory_analysis_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0) or 0)
+    out["total_bytes"] = (out["argument_size_in_bytes"]
+                          + out["output_size_in_bytes"]
+                          + out["temp_size_in_bytes"]
+                          - out.get("alias_size_in_bytes", 0))
+    return out

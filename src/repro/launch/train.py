@@ -1,0 +1,104 @@
+"""Production training driver (deliverable a/b): --arch × --shape × --opt.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 50 --opt owner
+
+On real hardware this launches against the production mesh; on this CPU
+container use --reduced for the smoke-scale config.  Wires together every
+substrate: config registry, dedication plan + MILP/greedy balancing,
+owner-centric DMuon, deterministic pipeline, checkpoint manager with
+rotation + async commit, straggler monitor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import api
+from repro.core.gram_ns import GramNSConfig
+from repro.core.muon import MuonConfig
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import model_fns
+from repro.runtime.elastic import StepTimer, StragglerMonitor, remesh
+from repro.train.step import init_state, make_train_step
+from repro.train.train_state import TrainState
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--opt", default="owner",
+                    choices=["owner", "gather", "adamw"])
+    ap.add_argument("--strategy", default="load_balance",
+                    choices=["load_balance", "greedy", "lpt", "round_robin",
+                             "rank0", "xor"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="build a mesh over all visible devices")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, reduced=args.reduced)
+    if cfg.frontend is not None or cfg.encdec:
+        raise SystemExit("use examples/serve_decode.py for frontend archs, "
+                         "or extend the batch builder with frames/patches")
+
+    mesh = remesh() if args.mesh and len(jax.devices()) > 1 else None
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes, mesh=mesh, strategy=args.strategy)
+    opt = api.Muon(plan, mesh=mesh,
+                   config=MuonConfig(mode=args.opt, learning_rate=args.lr,
+                                     ns=GramNSConfig()))
+    print(f"[plan] {plan.stats}")
+
+    state = init_state(cfg, opt, jax.random.PRNGKey(0), mesh=mesh)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start = 0
+    if args.resume and mgr is not None and mgr.latest_step() is not None:
+        state = TrainState(**mgr.restore(like=state._asdict()))
+        start = int(state.step)
+        print(f"[resume] step {start}")
+
+    step = make_train_step(cfg, opt, mesh, accum_steps=args.accum,
+                           donate=False)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    pipe = Pipeline(dcfg, mesh=mesh, start_step=start)
+    monitor = StragglerMonitor(num_owners=plan.num_owners)
+    timer = StepTimer()
+
+    try:
+        for i in range(start, args.steps):
+            with timer:
+                state = step(state, next(pipe))
+                jax.block_until_ready(state.loss_ema)
+            if (i + 1) % 10 == 0:
+                print(f"step {i+1:5d} loss_ema {float(state.loss_ema):.4f} "
+                      f"{np.mean(timer.history[-10:])*1e3:.0f} ms/step",
+                      flush=True)
+            if mgr is not None and (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state._asdict())
+    finally:
+        pipe.close()
+        if mgr is not None:
+            mgr.wait()
+    print(f"[done] steps={int(state.step)} loss_ema="
+          f"{float(state.loss_ema):.4f}")
+
+
+if __name__ == "__main__":
+    main()

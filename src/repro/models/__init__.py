@@ -1,0 +1,16 @@
+"""Model zoo: pure-JAX init/apply model definitions for the assigned archs.
+
+``model_fns(cfg)`` dispatches to the right backbone module (decoder-only
+transformer.py or encoder-decoder encdec.py); both expose the same surface:
+init / forward / prefill / decode_step.
+"""
+
+from repro.models.transformer import ArchConfig  # noqa: F401
+
+
+def model_fns(cfg):
+    if cfg.encdec:
+        from repro.models import encdec
+        return encdec
+    from repro.models import transformer
+    return transformer

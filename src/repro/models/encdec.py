@@ -1,0 +1,202 @@
+"""Encoder-decoder backbone (seamless-m4t style, audio frontend stubbed).
+
+Encoder consumes precomputed frame embeddings (the modality frontend is a
+stub per the assignment: ``input_specs()`` provides (B, S_enc, frontend_dim)
+arrays), projects them to d_model and runs non-causal attention blocks.
+Decoder blocks are self-attention (causal, cached) + cross-attention over the
+encoder output (KV cached once at prefill) + MLP.
+
+Entry points mirror transformer.py: forward / prefill / decode_step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import AttnConfig
+from repro.models.transformer import ArchConfig, _rope_for
+
+Params = Dict[str, Any]
+
+
+def _enc_attn_cfg(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                      causal=False, rope_theta=cfg.rope_theta)
+
+
+def _enc_block_init(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "attn_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "attn": layers.attention_init(ks[0], _enc_attn_cfg(cfg), dt),
+        "mlp_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def _dec_block_init(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "attn_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "attn": layers.attention_init(ks[0], cfg.attn_cfg(), dt),
+        "cross_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "cross_attn": layers.attention_init(ks[1], _enc_attn_cfg(cfg), dt),
+        "mlp_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "frontend_proj": {
+            "fc1": layers.linear_init(ks[0], cfg.frontend_dim, cfg.d_model,
+                                      dtype=dt),
+            "fc2": layers.linear_init(ks[1], cfg.d_model, cfg.d_model,
+                                      dtype=dt)},
+        "embed": layers.embed_init(ks[2], cfg.vocab, cfg.d_model, dt),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(cfg, k))(
+            jax.random.split(ks[3], n_enc)),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(cfg, k))(
+            jax.random.split(ks[4], cfg.n_layers)),
+        "enc_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+        "lm_head": {"embedding": (jax.random.normal(
+            ks[5], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt)},
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, frontend_dim) -> (B, S_enc, d_model)."""
+    fp = params["frontend_proj"]
+    x = layers.linear(fp["fc2"], jax.nn.gelu(
+        layers.linear(fp["fc1"], frames.astype(jnp.dtype(cfg.compute_dtype)))))
+    S = x.shape[1]
+    rope_cs = _rope_for(cfg, jnp.arange(S))
+    acfg = _enc_attn_cfg(cfg)
+
+    def body(h, bp):
+        from repro.models.transformer import _pin_batch
+        h = _pin_batch(cfg, h)
+        a = layers.rmsnorm(bp["attn_norm"], h, cfg.norm_eps)
+        out, _ = layers.attention(bp["attn"], acfg, a, rope_cs=rope_cs)
+        h = h + out
+        m = layers.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps)
+        return h + layers.mlp(bp["mlp"], m, cfg.act), None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(cfg: ArchConfig, bp: Params, h: jax.Array, enc_out, *,
+               rope_cs, self_cache=None, cross_cache=None, pos=None):
+    from repro.models.transformer import _pin_batch
+    h = _pin_batch(cfg, h)
+    a = layers.rmsnorm(bp["attn_norm"], h, cfg.norm_eps)
+    out, new_self = layers.attention(bp["attn"], cfg.attn_cfg(), a,
+                                     cache=self_cache, pos=pos,
+                                     rope_cs=rope_cs)
+    h = h + out
+    c = layers.rmsnorm(bp["cross_norm"], h, cfg.norm_eps)
+    out, _ = layers.attention(bp["cross_attn"], _enc_attn_cfg(cfg), c,
+                              xk=enc_out, cache=cross_cache,
+                              static_cache=cross_cache is not None)
+    h = h + out
+    m = layers.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps)
+    return h + layers.mlp(bp["mlp"], m, cfg.act), new_self
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+            frames: jax.Array, patches=None) -> jax.Array:
+    """Training: frames (B,S_enc,F) + decoder tokens (B,S_dec) -> logits."""
+    enc_out = encode(cfg, params, frames)
+    x = layers.embed(params["embed"], tokens).astype(
+        jnp.dtype(cfg.compute_dtype))
+    rope_cs = _rope_for(cfg, jnp.arange(x.shape[1]))
+
+    def body(h, bp):
+        h, _ = _dec_block(cfg, bp, h, enc_out, rope_cs=rope_cs)
+        return h, None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.unembed(params["lm_head"], x)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    kvshape = (L, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    cross = (L, batch, enc_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kvshape, dtype), "v": jnp.zeros(kvshape, dtype),
+            "cross_k": jnp.zeros(cross, dtype),
+            "cross_v": jnp.zeros(cross, dtype)}
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+            frames: jax.Array, max_len: int, cache_dtype=jnp.bfloat16):
+    """Encode + consume the decoder prompt; returns (logits, cache)."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    cache = init_cache(cfg, B, max_len, enc_out.shape[1], cache_dtype)
+
+    # precompute per-layer cross KV once (paper-standard enc-dec serving)
+    def cross_kv(bp):
+        acfg = _enc_attn_cfg(cfg)
+        k = layers.linear(bp["cross_attn"]["k_proj"], enc_out)
+        v = layers.linear(bp["cross_attn"]["v_proj"], enc_out)
+        KV, hd = acfg.n_kv_heads, acfg.head_dim
+        return (k.reshape(B, -1, KV, hd).astype(cache_dtype),
+                v.reshape(B, -1, KV, hd).astype(cache_dtype))
+    ck, cv = jax.vmap(cross_kv)(params["dec_blocks"])
+    cache["cross_k"], cache["cross_v"] = ck, cv
+
+    x = layers.embed(params["embed"], tokens).astype(
+        jnp.dtype(cfg.compute_dtype))
+    rope_cs = _rope_for(cfg, jnp.arange(S))
+
+    def body(h, scanned):
+        bp, kc, vc, ckc, cvc = scanned
+        h, new_self = _dec_block(cfg, bp, h, None, rope_cs=rope_cs,
+                                 self_cache=(kc, vc),
+                                 cross_cache=(ckc, cvc), pos=0)
+        return h, new_self
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache["k"], cache["v"] = nk, nv
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return layers.unembed(params["lm_head"], x)[:, 0], cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jax.Array, cache,
+                pos: jax.Array):
+    x = layers.embed(params["embed"], token[:, None]).astype(
+        jnp.dtype(cfg.compute_dtype))
+    positions = pos[None] if pos.ndim == 0 else pos
+    rope_cs = _rope_for(cfg, positions)
+
+    def body(h, scanned):
+        bp, kc, vc, ckc, cvc = scanned
+        h, new_self = _dec_block(cfg, bp, h, None, rope_cs=rope_cs,
+                                 self_cache=(kc, vc),
+                                 cross_cache=(ckc, cvc), pos=pos)
+        return h, new_self
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache = {**cache, "k": nk, "v": nv}
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.unembed(params["lm_head"], x)[:, 0], cache

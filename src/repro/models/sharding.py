@@ -1,0 +1,175 @@
+"""Partitioning rules: parameter, activation and cache shardings.
+
+Megatron-style TP over the 'model' axis (column-parallel in-projections,
+row-parallel out-projections — no collective until the block boundary), EP
+for MoE experts, vocab-sharded embeddings, optional ZeRO-3 parameter sharding
+over the DP axes for the ≥340B configs, and batch/sequence sharding for the
+serve caches.  Every rule is divisibility-guarded: a dim that does not divide
+the axis extent stays unsharded (e.g. hymba's 25 heads / 32001 vocab).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# last-name-component classification
+_OUT_SHARDED = {"q_proj", "k_proj", "v_proj", "up_proj", "gate_proj",
+                "in_proj", "dt_proj", "w_proj", "r_proj", "fc1",
+                "q_a_proj", "q_b_proj", "kv_a_proj", "kv_b_proj"}
+_IN_SHARDED = {"o_proj", "down_proj", "out_proj", "fc2"}
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _guard(mesh, dim: int, axes):
+    """axes if dim divides their extent, else None (stay replicated)."""
+    if axes is None:
+        return None
+    return axes if dim % _axis_size(mesh, axes) == 0 else None
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def param_specs(cfg, params_tree, mesh, *, zero3: bool = False):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or structs).
+
+    ZeRO-3 policy (FSDP-in-GSPMD, the MaxText pattern): weight feature dims
+    are sharded over the DP axis *and* activations are explicitly pinned to
+    batch-sharding at every block boundary (ArchConfig.act_batch_axes).  With
+    both constraints the partitioner's cheapest plan is to all-gather each
+    layer's weights transiently inside the scan — FSDP semantics.  Without
+    the activation pins it instead lowers to accidental 2D-TP (activations
+    feature-sharded over 'data', batch replication) — EXPERIMENTS.md §Perf,
+    nemotron iterations.
+    """
+    zaxis = "data" if (zero3 and "data" in mesh.axis_names) else None
+
+    def spec_for(path: str, shape) -> P:
+        parts = path.split("/")
+        name = parts[-2] if parts[-1] in ("w", "b") else parts[-1]
+        rank = len(shape)
+
+        if parts[-1] == "b":  # bias (..., out)
+            return P(*([None] * (rank - 1)),
+                     _guard(mesh, shape[-1], "model"))
+        if name == "embedding":
+            return P(_guard(mesh, shape[-2], "model"), None) if rank == 2 \
+                else P(*([None] * (rank - 2)),
+                       _guard(mesh, shape[-2], "model"), None)
+        if "experts" in parts:  # (L, E, din, dout): EP over 'model'
+            # ZeRO-3 'data' goes on the d_ff dim in Megatron pairing —
+            # out-dim for gate/up, in-dim for down — so the expert FFN incurs
+            # ONE activation all-reduce instead of one per GEMM (contracting
+            # on a sharded din); EXPERIMENTS.md §Perf, kimi iteration.
+            if name in _IN_SHARDED:      # down_proj (L, E, dff, d)
+                return P(*([None] * (rank - 3)),
+                         _guard(mesh, shape[-3], "model"),
+                         _guard(mesh, shape[-2], zaxis), None)
+            return P(*([None] * (rank - 3)),   # gate/up (L, E, d, dff)
+                     _guard(mesh, shape[-3], "model"),
+                     None, _guard(mesh, shape[-1], zaxis))
+        if name == "router_w":
+            return P(*([None] * (rank - 1)),
+                     _guard(mesh, shape[-1], "model"))
+        if name == "conv_w":  # (L, K, di)
+            return P(*([None] * (rank - 1)),
+                     _guard(mesh, shape[-1], "model"))
+        if name == "a_log":   # (L, di, ds)
+            return P(*([None] * (rank - 2)),
+                     _guard(mesh, shape[-2], "model"), None)
+        if name in ("dt_bias", "d_skip", "gate_bias", "if_gate_bias"):
+            return P(*([None] * (rank - 1)),
+                     _guard(mesh, shape[-1], "model"))
+        if name in _OUT_SHARDED and parts[-1] == "w":
+            return P(*([None] * (rank - 2)),
+                     _guard(mesh, shape[-2], zaxis),
+                     _guard(mesh, shape[-1], "model"))
+        if name in _IN_SHARDED and parts[-1] == "w":
+            return P(*([None] * (rank - 2)),
+                     _guard(mesh, shape[-2], "model"),
+                     _guard(mesh, shape[-1], zaxis))
+        return P(*([None] * rank))  # norms, scalars, small gates
+
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    treedef = jax.tree_util.tree_structure(params_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        specs.append(spec_for(path, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def batch_spec(mesh, batch: int) -> P:
+    axes = dp_axes(mesh)
+    if axes and batch % _axis_size(mesh, axes) == 0:
+        return P(axes)
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P(("data",))
+    return P(None)
+
+
+def input_shardings(cfg, specs_dict, mesh):
+    """NamedShardings for the input_specs() dict of a cell (batch-sharded)."""
+    out = {}
+    for name, sd in specs_dict.items():
+        if sd.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+        else:
+            bs = batch_spec(mesh, sd.shape[0])
+            out[name] = NamedSharding(
+                mesh, P(*(bs + P(*([None] * (sd.ndim - 1))))))
+    return out
+
+
+def cache_specs(cfg, cache_tree, mesh):
+    """Decode-cache shardings: batch over DP; kv-heads over 'model' when
+    divisible, otherwise sequence sharding over 'model' (the fallback that
+    also serves the b=1 long-context cells).  Leaf ranks:
+      (L,B,S,KV,hd) attention KV · (L,B,S,r) MLA latent ·
+      (L,B,S,1,rd) MLA rope key · (L,B,K,di) ssm conv · (L,B,di,ds) ssm h ·
+      (n,B,H,hd,hd)/(n,B,H,hd)/(n,B,H) mLSTM · (n,B,d) sLSTM."""
+    def spec_for(path: str, shape) -> P:
+        rank = len(shape)
+        if rank < 3:
+            return P(*([None] * rank))
+        dims = [None] * rank
+        if shape[1] > 1:
+            dims[1] = _guard(mesh, shape[1], dp_axes(mesh))
+        leafname = path.split("/")[-1]
+        if rank >= 5:                       # (L,B,S,KV,hd) or mLSTM C
+            dims[3] = _guard(mesh, shape[3], "model")
+            if dims[3] is None:
+                dims[2] = _guard(mesh, shape[2], "model")
+        elif rank == 4:
+            if "conv" in leafname:          # (L,B,K,di): shard channels
+                dims[3] = _guard(mesh, shape[3], "model")
+            else:                           # (L,B,S,r) latent / (L,B,di,ds)
+                dims[2] = _guard(mesh, shape[2], "model")
+        else:                               # (L,B,X)
+            dims[2] = _guard(mesh, shape[2], "model")
+        return P(*dims)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        specs.append(spec_for(path, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)

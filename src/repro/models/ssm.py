@@ -1,0 +1,121 @@
+"""Selective state-space mixer (Mamba-style), used by the hymba hybrid blocks.
+
+Faithful-in-structure selective SSM:
+    x -> in_proj -> (xz): x branch conv1d + SiLU, gated by z branch
+    dt, B, C from x_proj;  h_{t+1} = exp(A·dt)·h_t + dt·B·x_t;  y = C·h + D·x
+
+The recurrence runs as an associative scan over time (parallel prefix on
+TPU), giving O(S) work — this is what qualifies the hybrid archs for the
+long_500k shape.  Decode keeps (conv_state, ssm_state) per layer.
+
+Param naming: conv kernels / A_log / dt_bias / D ("skip") are excluded from
+Muon by the dedication name rules; in/x/dt/out projections are Muon matrices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or max(16, self.d_model // 16)
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dtr
+    return {
+        "in_proj": layers.linear_init(ks[0], cfg.d_model, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "x_proj": layers.linear_init(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": layers.linear_init(ks[3], dtr, di, dtype=dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": layers.linear_init(ks[4], di, cfg.d_model, dtype=dtype),
+    }
+
+
+def _conv1d(w: jax.Array, x: jax.Array,
+            state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,di), w: (K,di).
+    state: (B,K-1,di) trailing context. Returns (y, new_state)."""
+    K = w.shape[0]
+    B, S, di = x.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + S, :] * w[i].astype(x.dtype) for i in range(K))
+    return y, xp[:, -(K - 1):, :]
+
+
+def _selective_scan(a_bar, bx):
+    """h_t = a_bar_t * h_{t-1} + bx_t via associative scan over axis 1.
+    a_bar, bx: (B, S, di, ds)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a, b = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    return b
+
+
+def ssm(p, cfg: SSMConfig, x: jax.Array, *,
+        state: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """x: (B,S,d). state = (conv_state, h) for decode. Returns (y, state)."""
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = layers.linear(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state[0] if state is not None else None
+    xs, new_conv = _conv1d(p["conv_w"], xs, conv_state)
+    xs = jax.nn.silu(xs)
+
+    dbc = layers.linear(p["x_proj"], xs)
+    dt, Bc, Cc = jnp.split(dbc, [cfg.dtr, cfg.dtr + ds], axis=-1)
+    dt = jax.nn.softplus(layers.linear(p["dt_proj"], dt)
+                         + p["dt_bias"].astype(x.dtype))        # (B,S,di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (di,ds)
+
+    a_bar = jnp.exp(dt.astype(jnp.float32)[..., None] * A)       # (B,S,di,ds)
+    bx = (dt.astype(jnp.float32) * xs.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[..., None, :]                   # (B,S,di,ds)
+
+    if state is not None:   # seed the scan with the carried state
+        h0 = state[1]                                            # (B,di,ds)
+        bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+    h = _selective_scan(a_bar, bx)                               # (B,S,di,ds)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc.astype(jnp.float32))
+    y = (y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = layers.linear(p["out_proj"], y)
+    new_state = (new_conv, h[:, -1])
+    return out, new_state
+
+
+def ssm_init_state(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32))

@@ -1,0 +1,185 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM: per head a (hd × hd) memory C updated as
+    C_t = f_t·C_{t-1} + i_t·(v_t k_tᵀ),  n_t = f_t·n_{t-1} + i_t·k_t
+    y_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+with exponential input gates stabilized by a running max m_t.  The update is
+associative in (log-gate, C, n), so training runs as an associative scan over
+time — O(S) work, which is what qualifies xlstm for the long_500k shape.
+
+sLSTM — scalar-memory LSTM with exponential gating, per-head recurrence that
+is inherently sequential (lax.scan over time), interleaved every
+``slstm_every`` blocks as in the paper's [7:1]-style layouts.
+
+Muon-eligible leaves: q/k/v/o projections, up/down FFN, r/w sLSTM matrices.
+Gate biases / skip scalars stay on AdamW via the name rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    slstm_every: int = 8        # every k-th block is an sLSTM block
+    ff_mult: float = 2.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    return {
+        "q_proj": layers.linear_init(ks[0], d, d, dtype=dtype),
+        "k_proj": layers.linear_init(ks[1], d, d, dtype=dtype),
+        "v_proj": layers.linear_init(ks[2], d, d, dtype=dtype),
+        "o_proj": layers.linear_init(ks[3], d, d, dtype=dtype),
+        "if_gate_bias": jnp.zeros((2 * cfg.n_heads,), dtype),
+        "if_gate_w": (jax.random.normal(ks[4], (d, 2 * cfg.n_heads),
+                                        jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def mlstm(p, cfg: XLSTMConfig, x: jax.Array, *,
+          state: Optional[Tuple] = None):
+    """x: (B,S,d). state=(C, n, m) for decode carry. Returns (y, state)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = layers.linear(p["q_proj"], x).reshape(B, S, H, hd)
+    k = layers.linear(p["k_proj"], x).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = layers.linear(p["v_proj"], x).reshape(B, S, H, hd)
+    gates = (layers.dot(x, p["if_gate_w"])
+             + p["if_gate_bias"].astype(x.dtype)).astype(jnp.float32)
+    ig, fg = jnp.split(gates.reshape(B, S, 2, H), 2, axis=2)
+    ig = ig[:, :, 0]                                  # (B,S,H) log-space input
+    fg = jax.nn.log_sigmoid(fg[:, :, 0])              # (B,S,H) log forget
+
+    # stabilizer: m_t = max(f_t + m_{t-1}, i_t); scan is associative in
+    # (cumulative log f, running max) — use cumsum trick:
+    cum_f = jnp.cumsum(fg, axis=1)                    # (B,S,H)
+    # a_t = exp(i_t - m_t), with m_t = max over j<=t of (i_j + cumf_t - cumf_j)
+    shifted = ig - cum_f                              # i_j - cumf_j
+    run_max = jax.lax.associative_scan(jnp.maximum, shifted, axis=1)
+    m = run_max + cum_f                               # (B,S,H)
+    a = jnp.exp(shifted - run_max)                    # normalized input gate
+
+    kv = jnp.einsum("bshd,bshe->bshde", v.astype(jnp.float32),
+                    k.astype(jnp.float32))
+    # Stabilized coefficients: C_t = Σ_j exp(shifted_j − run_max_t) v_j k_jᵀ
+    # (the cumf terms cancel inside the max-stabilized form), so the scan
+    # decay between steps is exp(run_max_{t−1} − run_max_t) and each element
+    # enters with weight a_t = exp(shifted_t − run_max_t).
+    def combine(c1, c2):
+        f1, kv1, n1 = c1
+        f2, kv2, n2 = c2
+        return f1 * f2, f2 * kv1 + kv2, f2 * n1 + n2
+    decay = jnp.exp(jnp.concatenate(
+        [run_max[:, :1], run_max[:, :-1]], 1) - run_max)
+    a_ = a[..., None, None]
+    _, C, n5 = jax.lax.associative_scan(
+        combine,
+        (decay[..., None, None], a_ * kv,
+         (a[..., None] * k.astype(jnp.float32))[..., None]),  # rank-5 n
+        axis=1)
+    n = n5[..., 0]
+
+    if state is not None:
+        # decode path (S small): fold carried state sequentially
+        C0, n0, m0 = state
+        ms = jnp.maximum(m0[:, None] + cum_f, m)
+        scale_old = jnp.exp(m0[:, None] + cum_f - ms)
+        scale_new = jnp.exp(m - ms)
+        C = scale_new[..., None, None] * C + \
+            scale_old[..., None, None] * C0[:, None]
+        n = scale_new[..., None] * n + scale_old[..., None] * n0[:, None]
+        m = ms
+
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bshde,bshe->bshd", C, qf)
+    den = jnp.abs(jnp.einsum("bshe,bshe->bsh", n, qf))
+    y = num / jnp.maximum(den, 1.0)[..., None]
+    out = layers.linear(p["o_proj"], y.astype(x.dtype).reshape(B, S, d))
+    new_state = (C[:, -1], n[:, -1], m[:, -1])
+    return out, new_state
+
+
+def mlstm_init_state(cfg: XLSTMConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "w_proj": layers.linear_init(ks[0], d, 4 * d, dtype=dtype),
+        "r_proj": layers.linear_init(ks[1], d, 4 * d, dtype=dtype),
+        "gate_bias": jnp.zeros((4 * d,), dtype),
+        "o_proj": layers.linear_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def slstm(p, cfg: XLSTMConfig, x: jax.Array, *,
+          state: Optional[Tuple] = None):
+    """Sequential scalar-memory LSTM with exponential gating.
+    x: (B,S,d); state=(c,n,h,m). Returns (y, state)."""
+    B, S, d = x.shape
+    wx = layers.linear(p["w_proj"], x) + p["gate_bias"].astype(x.dtype)
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+    rw = p["r_proj"]
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        # carry stays fp32 (the cache/init dtype) regardless of the bf16
+        # compute dtype — scan requires carry-in == carry-out types
+        pre = (wx_t.astype(jnp.float32)
+               + layers.linear(rw, h.astype(x.dtype)).astype(jnp.float32))
+        zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(zi)
+        lf = jax.nn.log_sigmoid(fi)
+        mn = jnp.maximum(lf + m, ii)
+        i_ = jnp.exp(ii - mn)
+        f_ = jnp.exp(lf + m - mn)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h_new = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, mn), h_new.astype(x.dtype)
+
+    (c, n, h, m), ys = jax.lax.scan(step, (c0, n0, h0, m0),
+                                    jnp.swapaxes(wx, 0, 1))
+    y = jnp.swapaxes(ys, 0, 1)
+    out = layers.linear(p["o_proj"], y)
+    return out, (c, n, h, m)
+
+
+def slstm_init_state(cfg: XLSTMConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), dtype),
+            jnp.full((batch, d), -1e30, jnp.float32))

@@ -1,0 +1,97 @@
+"""Elastic scaling + straggler mitigation hooks (fault-tolerance runtime).
+
+At thousands of nodes the failure model is: a host drops, the job restarts
+on a different device set, training resumes from the last committed
+checkpoint (checkpoint/manager.py) with the data pipeline replayed from the
+stored step (data/pipeline.py determinism contract).  This module owns the
+two decisions that change on such an event:
+
+* ``remesh``             — rebuild the mesh for the surviving device count and
+                           recompute every plan keyed on it (dedication plan,
+                           shardings).  The dedication plan is a pure function
+                           of (param shapes, mesh), so elastic re-planning is
+                           a re-invocation, not a migration.
+* ``StragglerMonitor``   — tracks per-step wall times; when drift beyond a
+                           threshold persists, it re-solves the owner
+                           assignment with per-owner ``speed`` factors
+                           (core/load_balance.py) so a degraded host receives
+                           proportionally fewer Muon updates — the paper's
+                           measured-cost model applied online.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+def viable_mesh_shape(n_devices: int, prefer_model: int = 16):
+    """Largest (data, model) grid for a (possibly degraded) device count."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return (n_devices // model, model)
+
+
+def remesh(devices: Optional[Sequence] = None, prefer_model: int = 16):
+    """Build a mesh over the currently-live devices."""
+    import jax
+    devices = list(devices if devices is not None else jax.devices())
+    shape = viable_mesh_shape(len(devices), prefer_model)
+    arr = np.asarray(devices[:shape[0] * shape[1]]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"))
+
+
+@dataclass
+class StragglerMonitor:
+    """Detect persistent per-owner slowdowns and trigger rebalancing."""
+    num_owners: int
+    window: int = 20
+    threshold: float = 1.3          # relative slowdown triggering rebalance
+    _times: List[np.ndarray] = field(default_factory=list)
+
+    def record(self, per_owner_seconds: np.ndarray) -> None:
+        self._times.append(np.asarray(per_owner_seconds, dtype=float))
+        if len(self._times) > self.window:
+            self._times.pop(0)
+
+    def speed_estimate(self) -> np.ndarray:
+        """speed[r] ∈ (0, 1]: measured relative throughput per owner."""
+        if not self._times:
+            return np.ones(self.num_owners)
+        med = np.median(np.stack(self._times), axis=0)
+        fastest = med.min()
+        return np.clip(fastest / np.maximum(med, 1e-12), 1e-3, 1.0)
+
+    def should_rebalance(self) -> bool:
+        if len(self._times) < self.window:
+            return False
+        speed = self.speed_estimate()
+        return bool(speed.min() < 1.0 / self.threshold)
+
+    def rebalance(self, shape_counts, cost_model, strategy: str = "greedy"):
+        """Re-solve the assignment with measured speeds (one-line hook)."""
+        from repro.core import load_balance
+        return load_balance.assign(
+            shape_counts, self.num_owners, strategy=strategy,
+            cost_model=cost_model, speed=self.speed_estimate())
+
+
+class StepTimer:
+    """Wall-clock per step; feeds the monitor on real deployments where
+    per-owner optimizer timings are exported by the profiler."""
+
+    def __init__(self):
+        self.t0 = None
+        self.history: List[float] = []
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.history.append(time.perf_counter() - self.t0)

@@ -1,0 +1,192 @@
+"""Train-step factory: loss, grad accumulation, remat, shardings, donation.
+
+``make_train_step`` builds the jit'd DMuon training step (Alg. 1 end-to-end):
+forward/backward on the DP/TP-sharded model, then the optimizer transform —
+owner-centric DMuon, gather-then-compute Muon-AG, or AdamW, selected by the
+MuonConfig the caller provides.  The optimizer's owner transposes and the
+publish all-gathers sit in the same XLA program as fwd/bwd, so the scheduler
+overlaps them with step compute (DESIGN.md §2).
+
+Microbatching: ``accum_steps`` splits the global batch on the leading axis
+and accumulates grads with a lax.scan (memory ∝ one microbatch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.api import Muon
+from repro.models import model_fns, sharding as shard_rules
+from repro.train.train_state import TrainState
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross entropy in a vocab-sharding-friendly form.
+
+    ``take_along_axis`` over a vocab-sharded logits tensor forces the SPMD
+    partitioner to replicate the batch dim (a full-logits all-reduce per
+    microbatch — see EXPERIMENTS.md §Perf).  The where/sum form reduces over
+    the sharded vocab axis locally and only all-reduces (B, S) scalars.
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(labels.dtype, lg.shape,
+                                          lg.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], lg, 0.0),
+                   axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg, mesh=None):
+    m = model_fns(cfg)
+
+    def loss_fn(params, batch):
+        kwargs = {k: batch[k] for k in ("patches", "frames") if k in batch}
+        logits = m.forward(cfg, params, batch["tokens"], **kwargs)
+        if mesh is not None:
+            # keep the (B, S, V) logits sharded: vocab over 'model' when it
+            # divides, else sequence-parallel loss (odd vocabs like hymba's
+            # 32001); batch over the DP axes throughout.
+            dp = shard_rules.dp_axes(mesh)
+            ms = mesh.shape["model"]
+            if logits.shape[-1] % ms == 0:
+                spec = P(dp, None, "model")
+            elif logits.shape[1] % ms == 0:
+                spec = P(dp, "model", None)
+            else:
+                spec = P(dp, None, None)
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(mesh, spec))
+        return softmax_xent(logits, batch["labels"])
+    return loss_fn
+
+
+def make_train_step(cfg, opt: Muon, mesh=None, *, accum_steps: int = 1,
+                    donate: bool = True, grad_specs=None,
+                    accum_dtype=jnp.float32):
+    """Returns ``step(state, batch) -> state`` (jit'd when mesh is given).
+
+    ``grad_specs``: optional PartitionSpec pytree matching params — pins the
+    gradient accumulator to the parameter shardings (otherwise the SPMD
+    partitioner may replicate the fp32 accumulator, which at 671B+ scale is
+    the largest buffer in the program).
+    """
+    loss_fn = make_loss_fn(cfg, mesh)
+
+    def _pin(tree):
+        if mesh is None or grad_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), tree, grad_specs,
+            is_leaf=lambda x: x is None)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss,
+                    _pin(jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                      grad_acc, grads))), None
+
+        def split(x):
+            out = x.reshape((accum_steps, -1) + x.shape[1:])
+            if mesh is not None:
+                # keep each microbatch DP-sharded: the reshape otherwise lets
+                # the partitioner replicate the batch axis inside the scan
+                dp = shard_rules.dp_axes(mesh)
+                from repro.models.sharding import _axis_size
+                if out.shape[1] % _axis_size(mesh, dp) == 0:
+                    out = jax.lax.with_sharding_constraint(
+                        out, NamedSharding(mesh, P(
+                            None, dp, *([None] * (out.ndim - 2)))))
+            return out
+        micro_batches = jax.tree.map(split, batch)
+        zero = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params))
+        (loss, grads), _ = jax.lax.scan(
+            micro, (jnp.zeros((), jnp.float32), zero), micro_batches)
+        inv = 1.0 / accum_steps
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state: TrainState, batch) -> TrainState:
+        loss, grads = compute_grads(state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(jnp.add, state.params, updates)
+        ema = jnp.where(state.step == 0, loss,
+                        0.98 * state.loss_ema + 0.02 * loss)
+        return TrainState(state.step + 1, params, opt_state, ema)
+
+    # State enters pre-sharded (init_state) and batches pre-placed (pipeline);
+    # jit infers in/out shardings from them, donation recycles the old state.
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def init_state(cfg, opt: Muon, key, mesh=None, *, zero3: bool = False):
+    """Initialize params (sharded via the partitioning rules) + opt state."""
+    m = model_fns(cfg)
+
+    def build():
+        params = m.init(cfg, key)
+        opt_state = opt.init(params)
+        return TrainState(jnp.zeros((), jnp.int32), params, opt_state,
+                          jnp.zeros((), jnp.float32))
+
+    if mesh is None:
+        return jax.jit(build)()
+
+    shapes = jax.eval_shape(build)
+    pspecs = shard_rules.param_specs(cfg, shapes.params, mesh, zero3=zero3)
+    out_shardings = TrainState(
+        step=NamedSharding(mesh, P()),
+        params=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+        opt_state=_opt_state_shardings(opt, shapes.opt_state, pspecs, mesh),
+        loss_ema=NamedSharding(mesh, P()),
+    )
+    return jax.jit(build, out_shardings=out_shardings)()
+
+
+def _opt_state_shardings(opt: Muon, opt_shapes, pspecs, mesh):
+    """Momentum: owner layout (fully sharded stacks) for mode='owner';
+    AdamW moments follow their parameter's sharding."""
+    from repro.core.muon import owner_sharding
+
+    flat_pspecs = {}
+    from repro.core.dedication import _key_str
+    for kp, spec in jax.tree_util.tree_leaves_with_path(
+            pspecs, is_leaf=lambda x: isinstance(x, P)):
+        path = "/".join(_key_str(k) for k in kp)
+        flat_pspecs[path] = spec
+
+    own = owner_sharding(opt.plan, mesh) or NamedSharding(mesh, P())
+
+    def mom_shard(path_prefix, tree):
+        def one(kp, leaf):
+            path = "/".join(_key_str(k) for k in kp)
+            spec = flat_pspecs.get(path)
+            return NamedSharding(mesh, spec if spec is not None else P())
+        flat = jax.tree_util.tree_leaves_with_path(tree)
+        treedef = jax.tree_util.tree_structure(tree)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(kp, l) for kp, l in flat])
+
+    momentum = opt_shapes.momentum
+    if opt.config.mode == "owner":
+        mom_sh = jax.tree.map(lambda _: own, momentum)
+    else:
+        mom_sh = mom_shard("", momentum)
+    from repro.core.muon import AdamWState, MuonState
+    adam_sh = AdamWState(mu=mom_shard("", opt_shapes.adamw.mu),
+                         nu=mom_shard("", opt_shapes.adamw.nu))
+    ef = opt_shapes.error_feedback
+    ef_sh = None if ef is None else mom_shard("", ef)
+    return MuonState(step=NamedSharding(mesh, P()), momentum=mom_sh,
+                     adamw=adam_sh, error_feedback=ef_sh)

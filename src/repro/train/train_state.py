@@ -1,0 +1,29 @@
+"""Training state container + dtype policies."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    params: Any              # model params (master dtype)
+    opt_state: Any           # MuonState
+    loss_ema: jax.Array      # running loss for logging
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """param = master storage; compute = activations/matmul inputs."""
+    param: str = "float32"
+    compute: str = "float32"
+
+    def cast_compute(self, tree):
+        c = jnp.dtype(self.compute)
+        return jax.tree.map(
+            lambda x: x.astype(c) if jnp.issubdtype(x.dtype, jnp.floating)
+            else x, tree)

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of the same
+family — one forward/train step on CPU asserting output shapes + no NaNs,
+plus prefill/decode cache-consistency against the training forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.shapes import cell_supported
+from repro.models import model_fns
+
+ARCHS = list(configs.ARCH_IDS)
+B, S = 2, 16
+
+
+def _inputs(cfg, key):
+    ks = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "patch":
+        out["patches"] = jax.random.normal(
+            ks[1], (B, cfg.frontend_len, cfg.frontend_dim)) * 0.1
+    if cfg.encdec:
+        out["frames"] = jax.random.normal(
+            ks[2], (B, S, cfg.frontend_dim)) * 0.1
+    elif cfg.frontend == "frame":
+        out["frames"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_len, cfg.frontend_dim)) * 0.1
+    return out
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch(request):
+    cfg = configs.get(request.param, reduced=True)
+    m = model_fns(cfg)
+    params = jax.jit(lambda k: m.init(cfg, k))(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, m, params = arch
+    inp = _inputs(cfg, jax.random.PRNGKey(1))
+    logits = jax.jit(lambda p, i: m.forward(cfg, p, **i))(params, inp)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all()), f"{cfg.name}: non-finite logits"
+
+
+def test_train_step_grads_finite(arch):
+    cfg, m, params = arch
+    inp = _inputs(cfg, jax.random.PRNGKey(2))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+
+    def loss_fn(p):
+        logits = m.forward(cfg, p, **inp)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss)), cfg.name
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        assert bool(jnp.isfinite(g).all()), (cfg.name, path)
+    # at least the embedding and some block weight receive nonzero gradient
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert total > 0
+
+
+def test_prefill_decode_matches_forward(arch):
+    """prefill(t[:S]) logits == forward(t)[:, S-1]; then one decode step
+    equals forward on the extended sequence — validates every cache path."""
+    cfg, m, params = arch
+    inp = _inputs(cfg, jax.random.PRNGKey(4))
+    tokens = inp.pop("tokens")
+    max_len = S + 4
+
+    full = m.forward(cfg, params, tokens, **inp)
+    prefix = 0
+    if cfg.encdec:
+        logits_p, cache = m.prefill(cfg, params, tokens,
+                                    frames=inp["frames"], max_len=max_len,
+                                    cache_dtype=jnp.float32)
+    elif cfg.family == "ssm":
+        logits_p, cache = m.prefill(cfg, params, tokens, max_len)
+    else:
+        prefix = cfg.frontend_len if cfg.frontend is not None else 0
+        logits_p, cache = m.prefill(cfg, params, tokens,
+                                    max_len + prefix,
+                                    cache_dtype=jnp.float32, **inp)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3,
+                               err_msg=f"{cfg.name}: prefill != forward")
+
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, _ = m.decode_step(cfg, params, nxt, cache,
+                                jnp.asarray(S + prefix, jnp.int32))
+    ext = jnp.concatenate([tokens, nxt[:, None]], 1)
+    full2 = m.forward(cfg, params, ext, **inp)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full2[:, -1]), rtol=5e-3, atol=5e-3,
+                               err_msg=f"{cfg.name}: decode != forward")
+
+
+def test_long_500k_eligibility_rule():
+    eligible = {a for a in ARCHS
+                if cell_supported(configs.get(a, reduced=True),
+                                  "long_500k") is None}
+    assert eligible == {"hymba-1.5b", "xlstm-350m"}
+
+
+def test_registry_covers_assignment():
+    assert set(ARCHS) == {
+        "hymba-1.5b", "qwen2.5-14b", "nemotron-4-340b", "smollm-360m",
+        "stablelm-1.6b", "deepseek-v3-671b", "kimi-k2-1t-a32b", "xlstm-350m",
+        "seamless-m4t-large-v2", "llava-next-mistral-7b"}
+
+
+def test_full_configs_match_assignment_table():
+    rows = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    }
+    for a, (L, d, H, KV, ff, V) in rows.items():
+        cfg = configs.get(a)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, KV, ff, V), a
+    # family-specific extras
+    assert configs.get("deepseek-v3-671b").moe.n_experts == 256
+    assert configs.get("deepseek-v3-671b").moe.top_k == 8
+    assert configs.get("deepseek-v3-671b").attn_kind == "mla"
+    assert configs.get("kimi-k2-1t-a32b").moe.n_experts == 384
+    assert configs.get("hymba-1.5b").ssm.d_state == 16

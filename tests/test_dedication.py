@@ -1,0 +1,111 @@
+"""dedicate_params: classification, grouping, packed-layout round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.muon import pack_group, unpack_group
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 8)
+    return {
+        "embed": {"table": jax.random.normal(ks[0], (1000, 64))},
+        "layers": {
+            "attn_q": jax.random.normal(ks[1], (4, 64, 64)),    # stacked L=4
+            "attn_o": jax.random.normal(ks[2], (4, 64, 64)),
+            "mlp_up": jax.random.normal(ks[3], (4, 64, 256)),
+            "mlp_down": jax.random.normal(ks[4], (4, 256, 64)),  # transposed
+            "norm_scale": jnp.ones((4, 64)),
+            "mlp_bias": jnp.zeros((4, 256)),
+            "experts_up": jax.random.normal(ks[5], (2, 4, 64, 128)),  # L=2,E=4
+        },
+        "lm_head": jax.random.normal(ks[6], (64, 1000)),
+        "final_norm": jnp.ones((64,)),
+    }
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return api.dedicate_params(_params(), num_owners=4, strategy="greedy")
+
+
+def test_classification(plan):
+    assert "layers/attn_q" in plan.leaves
+    assert "layers/experts_up" in plan.leaves
+    assert "embed/table" not in plan.leaves          # excluded by name
+    assert "lm_head" not in plan.leaves
+    assert any("norm_scale" in p for p in plan.adamw_paths)
+    assert any("mlp_bias" in p for p in plan.adamw_paths)
+
+
+def test_grouping_and_transpose(plan):
+    # execution groups are per leaf; shape census aggregates across leaves
+    assert plan.groups["layers/attn_q"].key == (64, 64)
+    assert plan.groups["layers/attn_q"].count == 4
+    assert plan.groups["layers/mlp_down"].key == (64, 256)
+    assert plan.leaves["layers/mlp_down"].transpose is True
+    assert plan.leaves["layers/mlp_up"].transpose is False
+    # census (load-balancer view) merges same-shape leaves
+    assert plan.assignment.owner_of[(64, 64)].shape == (8,)   # q + o
+    assert plan.assignment.owner_of[(64, 256)].shape == (8,)  # up + down
+    # MoE experts: 2*4 = 8 matrices of (64, 128) in one leaf
+    assert plan.groups["layers/experts_up"].count == 8
+
+
+def test_owner_major_pack_layout(plan):
+    for key, g in plan.groups.items():
+        assert g.packed_size == plan.num_owners * g.capacity
+        # every member appears exactly once; pads are -1
+        members = g.pack_index[g.pack_index >= 0]
+        assert sorted(members.tolist()) == list(range(g.count))
+        # owner of position p is p // capacity, matching owner_of
+        for w in range(g.count):
+            pos = g.unpack_index[w]
+            assert g.pack_index[pos] == w
+            assert pos // g.capacity == g.owner_of[w]
+
+
+def test_pack_unpack_roundtrip(plan):
+    params = _params()
+    for key, g in plan.groups.items():
+        leaf_vals = {p: params_at(params, p) for p in g.leaf_paths}
+        packed = pack_group(plan, key, leaf_vals)
+        m, n = g.key
+        assert packed.shape == (g.packed_size, m, n)
+        out = unpack_group(plan, key, packed)
+        for p in g.leaf_paths:
+            np.testing.assert_array_equal(np.asarray(out[p]),
+                                          np.asarray(leaf_vals[p]))
+
+
+def params_at(tree, path):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def test_gram_buckets(plan):
+    # all groups here have gram dim 64 -> single bucket fusing all 5 leaves
+    assert set(plan.buckets) == {64}
+    assert len(plan.buckets[64]) == 5
+
+
+def test_plan_with_shape_structs_only():
+    """Dry-run path: planning must work on ShapeDtypeStructs, no arrays."""
+    structs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           _params())
+    plan = api.dedicate_params(structs, num_owners=8, strategy="round_robin")
+    assert plan.stats["num_matrices"] == 24
+    assert plan.stats["padding_waste"] >= 0
+
+
+def test_stats(plan):
+    assert plan.stats["num_matrices"] == 24
+    assert plan.stats["num_groups"] == 5          # per-leaf groups
+    # embed/table, norm_scale, mlp_bias, lm_head, final_norm
+    assert plan.stats["num_adamw_leaves"] == 5

@@ -1,0 +1,27 @@
+"""Multi-device owner-centric execution, via a subprocess with 8 host devices.
+
+The main test process must keep seeing a single device (per the dry-run
+isolation rule), so the 8-device parity checks run in a child process with
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_parity_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "dist_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

@@ -1,0 +1,118 @@
+"""Owner assignment: MILP (Eq. 5), greedy fallback, ablation strategies, XOR layout."""
+
+import numpy as np
+import pytest
+
+from repro.core import load_balance as lb
+from repro.core.layout import (node_of_slot, column_of_slot, owner_slot,
+                               slot_sequence)
+
+SHAPES = {(1024, 4096): 32, (1024, 1024): 64, (128, 512): 96, (4096, 4096): 8}
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return lb.analytic_cost_model(SHAPES)
+
+
+def _check_coverage(asn, shapes):
+    """Eq. 5 equality constraint: every matrix assigned exactly once."""
+    for s, n in shapes.items():
+        assert len(asn.owner_of[s]) == n
+        assert sum(b for b, _ in asn.chunks[s]) == n
+
+
+@pytest.mark.parametrize("solver", ["milp", "greedy", "lpt"])
+def test_solvers_cover_all_matrices(cm, solver):
+    fn = {"milp": lb.solve_milp, "greedy": lb.solve_greedy,
+          "lpt": lb.solve_lpt}[solver]
+    asn = fn(SHAPES, cm, 8)
+    _check_coverage(asn, SHAPES)
+    assert asn.makespan(cm) > 0
+
+
+def test_milp_beats_naive_strategies(cm):
+    milp = lb.solve_milp(SHAPES, cm, 8)
+    rr = lb.round_robin(SHAPES, 8)
+    r0 = lb.rank0(SHAPES, 8)
+    assert milp.makespan(cm) <= rr.makespan(cm) + 1e-12
+    # rank0 concentrates everything on one owner — the ablation worst case
+    assert r0.makespan(cm) >= milp.makespan(cm) * 4
+    # MILP is within a small factor of the trivial lower bound (total/owners)
+    total = sum(cm.per_matrix(s) * n for s, n in SHAPES.items())
+    assert milp.makespan(cm) <= 2.0 * max(total / 8,
+                                          max(cm.cost(s, 1) for s in SHAPES))
+
+
+def test_greedy_close_to_milp(cm):
+    milp = lb.solve_milp(SHAPES, cm, 4)
+    greedy = lb.solve_greedy(SHAPES, cm, 4)
+    assert greedy.makespan(cm) <= 1.5 * milp.makespan(cm) + 1e-9
+
+
+def test_s_thr_fallback(cm):
+    # tiny threshold forces greedy even through the MILP front door
+    asn = lb.solve_milp(SHAPES, cm, 64, s_thr=10)
+    assert asn.strategy == "greedy"
+    _check_coverage(asn, SHAPES)
+
+
+def test_speed_aware_rebalancing(cm):
+    """Straggler mitigation: a 4x slower owner must receive less work."""
+    speed = np.ones(8)
+    speed[3] = 0.25
+    asn = lb.solve_greedy(SHAPES, cm, 8, speed=speed)
+    loads = asn.loads(cm)                   # raw work (not speed-scaled)
+    assert loads[3] < np.mean(np.delete(loads, 3))
+    base = lb.solve_greedy(SHAPES, cm, 8)
+    assert asn.makespan(cm, speed) <= base.makespan(cm, speed)
+
+
+def test_rank0_and_round_robin_shapes(cm):
+    for strat in ("round_robin", "rank0", "xor"):
+        asn = lb.assign(SHAPES, 8, strategy=strat, rows=2, cols=4)
+        _check_coverage(asn, SHAPES)
+    r0 = lb.assign(SHAPES, 8, strategy="rank0")
+    assert all((v == 0).all() for v in r0.owner_of.values())
+
+
+def test_cost_model_batching_amortizes_small_shapes():
+    """Fig. 7: small matrices gain from batching, big ones saturate alone."""
+    shapes = {(256, 256): 16, (4096, 16384): 4}
+    cm = lb.analytic_cost_model(shapes, batch_sizes=(1, 16))
+    small_gain = cm.cost((256, 256), 1) / (cm.cost((256, 256), 16) / 16)
+    big_gain = cm.cost((4096, 16384), 1) / (cm.cost((4096, 16384), 16) / 16)
+    assert small_gain > big_gain
+    assert small_gain > 1.2
+
+
+# ---------------------------- XOR layout (Eq. 3) ---------------------------
+
+def test_xor_layout_matches_paper_4x8():
+    """Figure 4: gpu(w) = w mod 8, node(w) = (w mod 4) xor (w//8 mod 4)."""
+    for w in range(64):
+        s = owner_slot(w, 4, 8)
+        assert column_of_slot(s, 8) == w % 8
+        assert node_of_slot(s, 8) == ((w % 4) ^ ((w // 8) % 4))
+
+
+def test_xor_layout_balance_and_dispersal():
+    rows, cols = 4, 8
+    seq = slot_sequence(rows * cols * 3, rows, cols)
+    # balance: every slot owns the same number of matrices
+    counts = np.bincount(seq, minlength=rows * cols)
+    assert counts.min() == counts.max() == 3
+    # dispersal: consecutive matrices land on distinct columns
+    colseq = seq % cols
+    assert all(colseq[i] != colseq[i + 1] for i in range(len(seq) - 1))
+    # rotation: consecutive groups of `cols` use different nodes per column
+    for g in range(3):
+        nodes_g = set(seq[g * cols:(g + 1) * cols] // cols)
+        assert len(nodes_g) >= 1
+
+
+def test_xor_layout_non_pow2_fallback_balanced():
+    rows, cols = 3, 6   # additive rotation path
+    seq = slot_sequence(rows * cols * 2, rows, cols)
+    counts = np.bincount(seq, minlength=rows * cols)
+    assert counts.min() == counts.max() == 2

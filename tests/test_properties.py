@@ -1,0 +1,153 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_balance as lb
+from repro.core.gram_ns import GramNSConfig, gram_newton_schulz
+from repro.core.layout import slot_sequence
+from repro.core.newton_schulz import newton_schulz
+
+_SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# --------------------------------------------------------- optimizer math
+
+@settings(**_SETTINGS)
+@given(m=st.integers(4, 24), n=st.integers(4, 48), seed=st.integers(0, 999))
+def test_ns_drives_singular_values_to_one(m, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    out = newton_schulz(x, num_steps=10)
+    s = jnp.linalg.svd(out.astype(jnp.float32), compute_uv=False)
+    # rank-deficient directions stay 0; everything else ~1
+    s = s[s > 0.2]
+    assert float(jnp.max(jnp.abs(s - 1.0))) < 0.1
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(4, 16), n=st.integers(16, 40), seed=st.integers(0, 999))
+def test_gram_ns_equals_standard_ns(m, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    a = newton_schulz(x, num_steps=5)
+    b = gram_newton_schulz(x, GramNSConfig(num_steps=5))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 999))
+def test_ns_left_orthogonal_equivariance(seed):
+    """NS(QM) == Q NS(M) for orthogonal Q — the polar factor is
+    left-equivariant, so the owner may orthogonalize in any basis."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    m = jax.random.normal(k1, (12, 20))
+    q, _ = jnp.linalg.qr(jax.random.normal(k2, (12, 12)))
+    a = newton_schulz(q @ m, num_steps=8)
+    b = q @ newton_schulz(m, num_steps=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+# ------------------------------------------------------------ assignment
+
+@st.composite
+def _census(draw):
+    n_shapes = draw(st.integers(1, 4))
+    out = {}
+    for _ in range(n_shapes):
+        m = draw(st.sampled_from([32, 64, 128, 256]))
+        n = draw(st.sampled_from([64, 128, 512, 1024]))
+        out[(min(m, n), max(m, n))] = draw(st.integers(1, 40))
+    return out
+
+
+@settings(**_SETTINGS)
+@given(census=_census(), owners=st.integers(1, 16))
+def test_assignment_covers_every_matrix_exactly_once(census, owners):
+    cm = lb.analytic_cost_model(census)
+    for strat in ("greedy", "lpt", "round_robin", "rank0"):
+        asn = lb.assign(census, owners, strategy=strat, cost_model=cm)
+        for s, count in census.items():
+            assert len(asn.owner_of[s]) == count               # Eq. 5
+            assert sum(b for b, _ in asn.chunks[s]) == count
+            assert (asn.owner_of[s] < owners).all()
+            assert (asn.owner_of[s] >= 0).all()
+
+
+@settings(**_SETTINGS)
+@given(census=_census(), owners=st.integers(2, 12))
+def test_greedy_never_worse_than_rank0(census, owners):
+    # batching-free cost model: with amortization, rank0's one mega-batch
+    # can genuinely beat split chunks on tiny censuses (the batching×balance
+    # interaction of §3.4) — the distribution property needs flat costs.
+    cm = lb.analytic_cost_model(census, batch_sizes=(1,))
+    g = lb.solve_greedy(census, cm, owners)
+    r0 = lb.rank0(census, owners)
+    assert g.makespan(cm) <= r0.makespan(cm) + 1e-12
+
+
+@settings(**_SETTINGS)
+@given(census=_census(), owners=st.integers(2, 8),
+       slow=st.integers(0, 7), factor=st.floats(2.0, 8.0))
+def test_speed_aware_rebalance_never_hurts(census, owners, slow, factor):
+    """With a degraded owner, solving WITH the measured speeds never yields a
+    worse speed-adjusted makespan than solving blind — under a batching-free
+    cost model.  (With batch amortization the property is genuinely false:
+    finer rebalancing granularity can cost more than it saves, the
+    batching×balance interaction of §3.4 — hypothesis found the
+    counterexample {(32,64):4}, 2 owners.)"""
+    slow = slow % owners
+    speed = np.ones(owners)
+    speed[slow] = 1.0 / factor
+    cm = lb.analytic_cost_model(census, batch_sizes=(1,))
+    aware = lb.solve_greedy(census, cm, owners, speed=speed)
+    blind = lb.solve_greedy(census, cm, owners)
+    assert aware.makespan(cm, speed) <= blind.makespan(cm, speed) + 1e-12
+
+
+# -------------------------------------------------------------- layout
+
+@settings(**_SETTINGS)
+@given(rows=st.sampled_from([2, 4, 8]), mult=st.sampled_from([1, 2, 4]),
+       periods=st.integers(1, 3))
+def test_xor_layout_balanced_for_divisible_meshes(rows, mult, periods):
+    cols = rows * mult
+    seq = slot_sequence(rows * cols * periods, rows, cols)
+    counts = np.bincount(seq, minlength=rows * cols)
+    assert counts.min() == counts.max() == periods
+    # consecutive matrices never share a column
+    if cols > 1:
+        colseq = seq % cols
+        assert all(colseq[i] != colseq[i + 1] for i in range(len(seq) - 1))
+
+
+# -------------------------------------------------------- pack round trip
+
+@settings(**_SETTINGS)
+@given(l=st.integers(1, 6), m=st.sampled_from([8, 16]),
+       n=st.sampled_from([8, 24]), owners=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 99))
+def test_pack_unpack_roundtrip_random_shapes(l, m, n, owners, seed):
+    from repro.core import api
+    from repro.core.muon import pack_group, unpack_group
+    params = {"w": jax.random.normal(jax.random.PRNGKey(seed), (l, m, n))}
+    plan = api.dedicate_params(params, num_owners=owners, strategy="greedy")
+    key = next(iter(plan.groups))
+    packed = pack_group(plan, key, {"w": params["w"]})
+    assert packed.shape[0] % owners == 0
+    out = unpack_group(plan, key, packed)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(params["w"]))
+
+
+# ------------------------------------------------------------ cost model
+
+@settings(**_SETTINGS)
+@given(m=st.sampled_from([64, 256]), n=st.sampled_from([256, 1024]))
+def test_cost_model_batching_amortization(m, n):
+    cm = lb.analytic_cost_model({(m, n): 8}, batch_sizes=(1, 2, 4, 8))
+    costs = [cm.cost((m, n), b) for b in (1, 2, 4, 8)]
+    # total cost grows with batch size, per-matrix cost never increases
+    assert all(c2 >= c1 - 1e-12 for c1, c2 in zip(costs, costs[1:]))
+    per = [c / b for c, b in zip(costs, (1, 2, 4, 8))]
+    assert all(p2 <= p1 + 1e-12 for p1, p2 in zip(per, per[1:]))

@@ -1,0 +1,70 @@
+"""Roofline harness: HLO walker trip-count correction vs analytic FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import hlo_walker
+from repro.launch.roofline import collective_bytes
+from repro.models import model_fns
+
+
+def _walk_flops(nl):
+    cfg = configs.get("smollm-360m", reduced=True, n_layers=nl, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                      remat=False)
+    m = model_fns(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((2, 64), jnp.int32)
+    c = jax.jit(lambda p, t: m.forward(cfg, p, t)).lower(params, tok).compile()
+    return hlo_walker.analyze_text(c.as_text()), cfg, params
+
+
+def test_walker_scales_with_layers():
+    """cost_analysis is trip-count-blind; the walker must not be."""
+    c2, _, _ = _walk_flops(2)
+    c8, _, _ = _walk_flops(8)
+    assert 3.0 < c8.flops / c2.flops < 4.5   # ~4x more layer flops + head
+
+
+def test_walker_matches_analytic_forward_flops():
+    costs, cfg, params = _walk_flops(8)
+    n_params = cfg.param_count()
+    tokens = 2 * 64
+    analytic = 2.0 * n_params * tokens      # forward ≈ 2·N·T (+attention)
+    assert 0.5 * analytic < costs.flops < 3.0 * analytic
+
+
+def test_walker_finds_matmul_flops_exactly():
+    a = jnp.zeros((128, 256))
+    b = jnp.zeros((256, 64))
+    c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    costs = hlo_walker.analyze_text(c.as_text())
+    assert costs.flops == 2 * 128 * 256 * 64
+
+
+def test_walker_scan_trip_count():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    c = jax.jit(f).lower(jnp.zeros((64, 64))).compile()
+    costs = hlo_walker.analyze_text(c.as_text())
+    assert costs.flops == pytest.approx(7 * 2 * 64**3, rel=0.01)
+
+
+def test_collective_bytes_regex():
+    hlo = """
+ENTRY %main (p: f32[8,4]) -> f32[8,4] {
+  %p = f32[8,4]{1,0} parameter(0)
+  %ag = f32[16,4]{1,0} all-gather(f32[8,4]{1,0} %p), replica_groups={{0,1}}
+  ROOT %ar = f32[8,4]{1,0} all-reduce(f32[8,4]{1,0} %p), to_apply=%add
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 4 * 4
+    assert out["all-reduce"] == 8 * 4 * 4
+    assert out["total"] == 2 * 8 * 4 * 4

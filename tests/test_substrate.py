@@ -1,0 +1,162 @@
+"""Substrate tests: data pipeline determinism, checkpoint manager (atomic
+commit / rotation / elastic restore), straggler monitor, end-to-end train
+steps with loss decrease, and checkpoint-restart bit-exactness.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import api
+from repro.core.muon import MuonConfig
+from repro.data.pipeline import DataConfig, Pipeline, batch_for_step
+from repro.runtime.elastic import StragglerMonitor, viable_mesh_shape
+from repro.train.step import init_state, make_train_step
+
+
+def test_pipeline_determinism_and_restart():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    b3 = batch_for_step(cfg, 3)
+    b3_again = batch_for_step(cfg, 3)
+    np.testing.assert_array_equal(np.asarray(b3["tokens"]),
+                                  np.asarray(b3_again["tokens"]))
+    # streaming from step 3 yields the same batch as direct access
+    pipe = Pipeline(cfg, start_step=3, prefetch=1)
+    first = next(pipe)
+    pipe.close()
+    np.testing.assert_array_equal(np.asarray(first["tokens"]),
+                                  np.asarray(b3["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b3["tokens"][:, 1:]),
+                                  np.asarray(b3["labels"][:, :-1]))
+
+
+def test_pipeline_has_learnable_structure():
+    cfg = DataConfig(vocab=50, seq_len=256, global_batch=8, seed=1)
+    b = batch_for_step(cfg, 0)
+    toks, labs = np.asarray(b["tokens"]), np.asarray(b["labels"])
+    # most transitions follow the deterministic table => repeated pairs
+    pairs = {}
+    for t, l in zip(toks.reshape(-1), labs.reshape(-1)):
+        pairs.setdefault(int(t), []).append(int(l))
+    consist = [max(np.bincount(v).max() / len(v), 0)
+               for v in pairs.values() if len(v) >= 10]
+    assert np.mean(consist) > 0.5
+
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32), "d": None}}
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree.map(lambda x: x + s if x is not None else None,
+                                 tree, is_leaf=lambda x: x is None))
+    assert mgr.all_steps() == [2, 3]          # rotation kept last 2
+    out = mgr.restore(3)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(tree["a"]) + 3)
+    assert out["b"]["d"] is None
+    assert mgr.latest_step() == 3
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(5, {"x": jnp.ones((4, 4))})
+    mgr.wait()
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    out = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones((4, 4)))
+
+
+def test_straggler_monitor_rebalances():
+    from repro.core import load_balance as lb
+    mon = StragglerMonitor(num_owners=4, window=5, threshold=1.2)
+    for _ in range(5):
+        mon.record(np.array([1.0, 1.0, 1.0, 3.0]))   # owner 3 is 3x slow
+    assert mon.should_rebalance()
+    shapes = {(64, 64): 12}
+    cm = lb.analytic_cost_model(shapes)
+    asn = mon.rebalance(shapes, cm)
+    loads = asn.loads(cm)
+    assert loads[3] < loads[:3].mean()    # degraded owner got less work
+
+
+def test_viable_mesh_shape():
+    assert viable_mesh_shape(256) == (16, 16)
+    assert viable_mesh_shape(512, prefer_model=16) == (32, 16)
+    assert viable_mesh_shape(252, prefer_model=16) == (18, 14)
+
+
+@pytest.mark.parametrize("mode", ["owner", "gather", "adamw"])
+def test_train_loop_loss_decreases(mode):
+    cfg = configs.get("smollm-360m", reduced=True)
+    plan = api.dedicate_params(
+        jax.eval_shape(lambda k: __import__("repro.models", fromlist=["m"])
+                       .model_fns(cfg).init(cfg, k), jax.random.PRNGKey(0)),
+        num_owners=2, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig(
+        mode=mode, learning_rate=0.02, adam_lr=2e-3))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step = make_train_step(cfg, opt, donate=False)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+
+    losses = []
+    from repro.train.step import make_loss_fn
+    loss_fn = jax.jit(make_loss_fn(cfg))
+    for i in range(10):
+        batch = batch_for_step(dcfg, i)
+        losses.append(float(loss_fn(state.params, batch)))
+        state = step(state, batch)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], (mode, losses)
+
+
+def test_train_restart_bit_exact(tmp_path):
+    """Checkpoint at step 3, restart, continue — states must match exactly."""
+    cfg = configs.get("smollm-360m", reduced=True)
+    from repro.models import model_fns
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes, num_owners=2, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig(mode="owner"))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    step = make_train_step(cfg, opt, donate=False)
+
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    for i in range(6):
+        if i == 3:
+            mgr.save(3, state._asdict())
+        state = step(state, batch_for_step(dcfg, i))
+
+    restored = mgr.restore(3)
+    state2 = type(state)(**restored)
+    for i in range(3, 6):
+        state2 = step(state2, batch_for_step(dcfg, i))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = configs.get("smollm-360m", reduced=True)
+    plan = api.dedicate_params(
+        jax.eval_shape(lambda k: __import__("repro.models", fromlist=["m"])
+                       .model_fns(cfg).init(cfg, k), jax.random.PRNGKey(0)),
+        num_owners=2, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig(mode="owner"))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    batch = batch_for_step(dcfg, 0)
+
+    s1 = init_state(cfg, opt, jax.random.PRNGKey(0))
+    s2 = init_state(cfg, opt, jax.random.PRNGKey(0))
+    full = make_train_step(cfg, opt, accum_steps=1, donate=False)(s1, batch)
+    accum = make_train_step(cfg, opt, accum_steps=4, donate=False)(s2, batch)
+    for a, b in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(accum.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)

@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the DMuon system (paper-level invariants)."""
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import api
+from repro.core.muon import MuonConfig
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.models import model_fns
+from repro.train.step import init_state, make_train_step
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_three_line_api_end_to_end():
+    """Paper Fig. 1(a): dedicate_params + Muon + update drives a real model."""
+    cfg = configs.get("smollm-360m", reduced=True)
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes)                    # line 1
+    opt = api.Muon(plan, config=MuonConfig())             # line 2
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))   # line 3 (init)
+    step = make_train_step(cfg, opt, donate=False)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    l0 = None
+    for i in range(8):
+        state = step(state, batch_for_step(dcfg, i))
+        if l0 is None:
+            l0 = float(state.loss_ema)
+    assert np.isfinite(float(state.loss_ema))
+    assert float(state.loss_ema) < l0            # learning
+
+
+def test_muon_semantics_invariant_across_strategies():
+    """Ownership strategy changes scheduling, never the update (paper §3.4:
+    'preserving exact optimizer semantics')."""
+    cfg = configs.get("smollm-360m", reduced=True, n_layers=2)
+    m = model_fns(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(1), x.shape) * 0.01,
+        params)
+    outs = []
+    for strat in ("greedy", "round_robin", "rank0"):
+        plan = api.dedicate_params(params, num_owners=4, strategy=strat)
+        opt = api.Muon(plan, config=MuonConfig())
+        st = opt.init(params)
+        upd, _ = opt.update(grads, st, params)
+        outs.append(upd)
+    for other in outs[1:]:
+        for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(other)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_dryrun_artifacts_complete_and_green():
+    """Deliverable e/g: every (arch × shape × mesh) cell recorded; runnable
+    cells ok; skips only via the sub-quadratic rule; roofline terms present."""
+    base = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(base):
+        import pytest
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    for mesh in ("single", "multi"):
+        files = glob.glob(os.path.join(base, mesh, "*.json"))
+        assert len(files) == 40, (mesh, len(files))
+        for fp in files:
+            with open(fp) as f:
+                d = json.load(f)
+            if d.get("skipped"):
+                assert d["shape"] == "long_500k"
+                continue
+            assert d.get("ok"), (fp, d.get("error"))
+            r = d["roofline"]
+            assert r["compute_s"] >= 0 and r["memory_s"] > 0
+            assert r["dominant"] in ("compute", "memory", "collective")
+            assert d["memory_analysis"]["total_bytes"] > 0
