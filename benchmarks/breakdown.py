@@ -21,7 +21,43 @@ CENSUS = {(256, 1024): 32, (256, 256): 64, (128, 512): 96}
 RANKS = 16
 
 
-def run() -> list[str]:
+def _variant_rows(variant: str) -> list[str]:
+    """Orthogonalizer-phase cost of a registered variant on one owner stack:
+    the refresh step (full NS) vs the steady-state step (MuonBP's cached
+    reuse; identical to refresh for stateless variants).  Quantifies the
+    amortization each backend buys over the plain Gram path."""
+    from repro.core import api
+    from repro.core.muon import MuonConfig
+    from repro.core.orthogonalize import make_orthogonalizer
+    from repro.core.owner_comms import OwnerLayout, group_key_str
+
+    spec = api.get_variant(variant)
+    if spec.elementwise:
+        return []
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 128, 512)) * 0.02
+    plan = api.dedicate_params({"w": x}, num_owners=1, strategy="greedy")
+    mcfg = MuonConfig(variant=variant)
+    layout = OwnerLayout(plan)
+    ortho = make_orthogonalizer(spec.orthogonalizer, mcfg)
+    state = ortho.init_state(layout, mcfg)
+    stacks = {group_key_str("w"): x}
+
+    fn = jax.jit(lambda sts, step, st: ortho(
+        sts, step=step, state=st, layout=layout, cfg=mcfg))
+    rows = []
+    t_refresh = time_fn(fn, stacks, jnp.zeros((), jnp.int32), state)
+    rows.append(csv_row(f"table2/variant/{variant}/ortho_refresh",
+                        t_refresh * 1e6))
+    # steady state: advance past the refresh boundary (step % period != 0)
+    _, state1 = fn(stacks, jnp.zeros((), jnp.int32), state)
+    t_steady = time_fn(fn, stacks, jnp.ones((), jnp.int32), state1)
+    rows.append(csv_row(f"table2/variant/{variant}/ortho_steady",
+                        t_steady * 1e6,
+                        derived=f"refresh/steady={t_refresh/t_steady:.2f}x"))
+    return rows
+
+
+def run(variant: str = "muon") -> list[str]:
     rows = []
     cfg = GramNSConfig(num_steps=5)
 
@@ -78,9 +114,16 @@ def run() -> list[str]:
                     ("autotune_batching", s_batch)):
         rows.append(csv_row(f"table2/share/{name}", s / tot * 1e6,
                             derived="share_x1e4"))
+
+    # ---- pluggable-variant orthogonalizer overhead
+    rows.extend(_variant_rows(variant))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="muonbp",
+                    help="variant for the orthogonalizer-overhead rows")
+    for r in run(variant=ap.parse_args().variant):
         print(r)

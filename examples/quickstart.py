@@ -1,10 +1,13 @@
 """Quickstart: the three-line DMuon API (paper Fig. 1a) on a tiny LM.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--variant muon|normuon|muonbp|adamw]
 
 Builds a reduced smollm config, dedicates parameters, trains 20 steps with
-owner-centric DMuon and prints the loss curve.
+owner-centric DMuon (or a registered optimizer variant) and prints the loss
+curve.
 """
+
+import argparse
 
 import jax
 
@@ -17,6 +20,13 @@ from repro.train.step import init_state, make_train_step
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--variant", default="muon",
+                    choices=sorted(api.VARIANTS),
+                    help="optimizer variant (see the registry in core/api.py)")
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
     cfg = configs.get("smollm-360m", reduced=True)
     shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
                             jax.random.PRNGKey(0))
@@ -24,17 +34,18 @@ def main():
     # --- the paper's three lines -----------------------------------------
     plan = api.dedicate_params(shapes)                  # 1. dedicate
     opt = api.Muon(plan, config=MuonConfig(             # 2. construct
-        learning_rate=0.02, momentum=0.95))
+        learning_rate=0.02, momentum=0.95, variant=args.variant))
     state = init_state(cfg, opt, jax.random.PRNGKey(0))  # 3. init / update
     # ----------------------------------------------------------------------
 
+    print(f"variant: {args.variant} — {opt.variant.description}")
     print(f"matrices under Muon: {plan.stats['num_matrices']} in "
           f"{plan.stats['num_groups']} groups; "
           f"{plan.stats['num_adamw_leaves']} AdamW leaves")
 
     step = make_train_step(cfg, opt, donate=False)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
-    for i in range(20):
+    for i in range(args.steps):
         state = step(state, batch_for_step(dcfg, i))
         if i % 5 == 4:
             print(f"step {int(state.step):3d}  loss_ema "

@@ -3,6 +3,11 @@
 Layers:
   coefficients / newton_schulz / gram_ns — the optimizer math
   dedication / layout / load_balance     — owner planning (paper §3.1/3.2.1/3.4)
-  distributed                            — owner-centric SPMD execution (§3.2/3.5)
-  muon / api                             — drop-in optimizer surface (§4)
+  owner_comms                            — owner-major layout + staged
+                                           all-to-all resharding (§3.2)
+  orthogonalize                          — pluggable NS backends (gram,
+                                           bucket-fused, NorMuon, MuonBP)
+  update_rules                           — momentum/scale/wd + AdamW
+  muon / api                             — orchestrator + drop-in surface
+                                           with the variant registry (§4)
 """

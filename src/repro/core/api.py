@@ -11,12 +11,28 @@ returning update *deltas*), so it composes with any JAX training loop without
 framework-level modifications — the drop-in property the paper claims for the
 PyTorch optimizer protocol, transplanted to the JAX convention.  State-dict
 accessors round-trip through the checkpoint manager (repro.checkpoint).
+
+Variant registry
+----------------
+``MuonConfig.variant`` selects a named optimizer variant; all variants share
+the owner-layout pipeline (core/owner_comms.py) and differ only in the
+orthogonalizer backend (core/orthogonalize.py) + its per-group state:
+
+    muon     — plain orthogonalized updates (the paper's optimizer)
+    normuon  — NorMuon (arXiv:2510.05491): neuron-wise second-moment
+               normalization of the orthogonalized update
+    muonbp   — MuonBP (arXiv:2510.16981): full NS refresh every
+               ``muonbp_period`` steps, cached polar map in between
+    adamw    — elementwise AdamW baseline
+
+``register_variant`` lets downstream scenarios (Dion2-style rank shrinking,
+AdaMuon, …) plug in new backends without touching the pipeline.
 """
 
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -24,9 +40,49 @@ from repro.core import dedication
 from repro.core.dedication import DedicationPlan, default_muon_predicate
 from repro.core.gram_ns import GramNSConfig
 from repro.core.muon import (MuonConfig, MuonState, muon_init, muon_update)
+from repro.core.update_rules import VariantSpec
 
 __all__ = ["dedicate_params", "Muon", "MuonConfig", "GramNSConfig",
-           "DedicationPlan", "default_muon_predicate"]
+           "DedicationPlan", "default_muon_predicate", "VariantSpec",
+           "VARIANTS", "register_variant", "get_variant",
+           "reshard_owner_state"]
+
+
+# --------------------------------------------------------------------------
+# Variant registry
+# --------------------------------------------------------------------------
+
+VARIANTS: Dict[str, VariantSpec] = {}
+
+
+def register_variant(spec: VariantSpec, *, overwrite: bool = False) -> None:
+    """Register a named optimizer variant (e.g. from a scenario plugin)."""
+    if spec.name in VARIANTS and not overwrite:
+        raise ValueError(f"variant {spec.name!r} already registered")
+    VARIANTS[spec.name] = spec
+
+
+def get_variant(name: str) -> VariantSpec:
+    try:
+        return VARIANTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown variant {name!r}; known: {sorted(VARIANTS)}") from None
+
+
+register_variant(VariantSpec(
+    "muon", orthogonalizer="auto",
+    description="owner-centric Muon: batched Gram NS (bucket-fused when "
+                "GramNSConfig.bucket_fusion)"))
+register_variant(VariantSpec(
+    "normuon", orthogonalizer="normuon", stateful=True,
+    description="Muon + NorMuon neuron-wise second-moment normalization"))
+register_variant(VariantSpec(
+    "muonbp", orthogonalizer="block_periodic", stateful=True,
+    description="Muon with block-periodic NS refresh (MuonBP)"))
+register_variant(VariantSpec(
+    "adamw", orthogonalizer="none", elementwise=True,
+    description="elementwise AdamW baseline (no matrix pipeline)"))
 
 
 def dedicate_params(params, mesh=None, *, num_owners: Optional[int] = None,
@@ -63,7 +119,12 @@ class Muon:
         cfg = config or MuonConfig()
         if overrides:
             cfg = replace(cfg, **overrides)
+        get_variant(cfg.variant)   # fail fast on unknown variants
         self.config = cfg
+
+    @property
+    def variant(self) -> VariantSpec:
+        return get_variant(self.config.variant)
 
     def init(self, params) -> MuonState:
         return muon_init(self.plan, params, self.config, self.mesh)
@@ -76,59 +137,60 @@ class Muon:
     def state_dict(self, state: MuonState) -> dict:
         return {"step": state.step, "momentum": state.momentum,
                 "adamw_mu": state.adamw.mu, "adamw_nu": state.adamw.nu,
-                "error_feedback": state.error_feedback}
+                "error_feedback": state.error_feedback,
+                "variant_state": state.variant_state}
 
     def load_state_dict(self, d: dict) -> MuonState:
         from repro.core.muon import AdamWState
         return MuonState(step=d["step"], momentum=d["momentum"],
                          adamw=AdamWState(d["adamw_mu"], d["adamw_nu"]),
-                         error_feedback=d.get("error_feedback"))
+                         error_feedback=d.get("error_feedback"),
+                         variant_state=d.get("variant_state"))
 
 
 def reshard_owner_state(state, old_plan: DedicationPlan,
                         new_plan: DedicationPlan, new_mesh=None):
     """Elastic restart across owner counts (fault-tolerance substrate).
 
-    Owner-layout momentum buffers are padded to ``D·cap`` rows, so a
-    checkpoint taken at D owners cannot be loaded verbatim onto D′ owners
-    after a node failure.  This unpacks each group's momentum to its logical
-    (count, m, n) rows under the OLD plan and repacks/pads it under the NEW
+    Owner-layout buffers are padded to ``D·cap`` rows, so a checkpoint taken
+    at D owners cannot be loaded verbatim onto D′ owners after a node
+    failure.  This unpacks each group's owner-major buffers to their logical
+    (count, ...) rows under the OLD plan and repacks/pads them under the NEW
     plan — semantics are exactly preserved (the pad rows are zeros and never
-    consumed).  AdamW moments and error feedback are training-layout pytrees
-    and reshard by placement alone.
+    consumed).  Covers the momentum stacks AND any per-variant state buffers
+    (NorMuon neuron moments, MuonBP polar caches), all of which share the
+    owner-major row layout.  AdamW moments and error feedback are
+    training-layout pytrees and reshard by placement alone.
     """
     import jax
-    import jax.numpy as jnp
-    import numpy as np
 
-    from repro.core.muon import (MuonState, _group_key_str, owner_sharding)
+    from repro.core.muon import MuonState, group_key_str
+    from repro.core.owner_comms import owner_sharding, repack_rows
 
-    new_momentum = {}
-    shard = owner_sharding(new_plan, new_mesh)
-    for key, old_g in old_plan.groups.items():
-        new_g = new_plan.groups[key]
-        assert old_g.count == new_g.count, (key, old_g.count, new_g.count)
-        buf = state.momentum[_group_key_str(key)]
-        # unpack logical rows under the old plan
-        if np.array_equal(old_g.unpack_index, np.arange(old_g.count)):
-            rows = buf[:old_g.count]
-        else:
-            rows = jnp.take(buf, jnp.asarray(old_g.unpack_index), axis=0)
-        # repack under the new plan
-        n_pad = new_g.packed_size - new_g.count
-        if np.array_equal(new_g.pack_index[:new_g.count],
-                          np.arange(new_g.count)):
-            packed = rows if n_pad == 0 else jnp.concatenate(
-                [rows, jnp.zeros((n_pad,) + rows.shape[1:], rows.dtype)], 0)
-        else:
-            ext = jnp.concatenate(
-                [rows, jnp.zeros((1,) + rows.shape[1:], rows.dtype)], 0)
-            idx = np.where(new_g.pack_index < 0, new_g.count,
-                           new_g.pack_index)
-            packed = jnp.take(ext, jnp.asarray(idx), axis=0)
+    def repack_buffer(skey_to_key, skey, buf):
+        old_g = old_plan.groups[skey_to_key[skey]]
+        new_g = new_plan.groups[skey_to_key[skey]]
+        assert old_g.count == new_g.count, (skey, old_g.count, new_g.count)
+        packed = repack_rows(old_g, new_g, buf)
+        shard = owner_sharding(new_plan, new_mesh, ndim=packed.ndim)
         if shard is not None:
             packed = jax.device_put(packed, shard)
-        new_momentum[_group_key_str(key)] = packed
+        return packed
+
+    skey_to_key = {group_key_str(k): k for k in old_plan.groups}
+    new_momentum = {skey: repack_buffer(skey_to_key, skey, buf)
+                    for skey, buf in state.momentum.items()}
+    new_vstate = state.variant_state
+    if new_vstate is not None:
+        # variant state is {field: {group_key_str: owner buffer} | None};
+        # None fields (e.g. NorMuon's stateless 'inner') must stay None so
+        # the resharded tree structure matches a fresh muon_init's
+        new_vstate = {
+            field: None if bufs is None else
+            {skey: repack_buffer(skey_to_key, skey, buf)
+             for skey, buf in bufs.items()}
+            for field, bufs in new_vstate.items()}
     return MuonState(step=state.step, momentum=new_momentum,
                      adamw=state.adamw,
-                     error_feedback=state.error_feedback)
+                     error_feedback=state.error_feedback,
+                     variant_state=new_vstate)

@@ -1,38 +1,59 @@
-"""The DMuon optimizer: owner-centric distributed Muon + baselines (§3.5, Alg. 1).
+"""The DMuon optimizer orchestrator: layout → orthogonalize → update rule.
 
-Optax-style gradient transformations with three execution modes:
+This module is the thin composition point of the three optimizer layers:
+
+* ``core/owner_comms.py``    — WHERE matrices live: the owner-major packed
+  layout, the staged all-to-all resharding, the owner sharding (§3.2).
+* ``core/orthogonalize.py``  — HOW updates are orthogonalized: batched Gram
+  NS, bucket-fused NS, full-matrix NS, and the NorMuon / MuonBP variant
+  backends, all behind one protocol.
+* ``core/update_rules.py``   — WHAT scalar math wraps them: momentum,
+  RMS-matching scale, weight decay / lr, and elementwise AdamW.
+
+Execution modes (``MuonConfig.mode``):
 
 * ``owner``  — DMuon.  Matrix gradients are packed into owner-major stacked
   buffers whose leading axis is sharded over the owner mesh axes (the SPMD
-  realization of "reduce to the owner": XLA inserts the reduce-scatter /
-  all-to-all).  Momentum lives permanently in this layout (owner-side
-  authoritative state, fully sharded).  The batched Gram-NS runs on the local
-  slice only — 1/D of the matrices per device — and the orthogonalized
-  updates are published back to each parameter's training sharding (XLA:
-  all-gather, overlapped by the scheduler).
-* ``gather`` — Muon-AG baseline.  Gradients stay in training layout,
-  momentum too; the full-matrix standard NS runs identically on every device
-  (the replicated-compute cost the paper eliminates).
+  realization of "reduce to the owner").  Momentum lives permanently in this
+  layout; the orthogonalizer runs on the local slice only and the updates
+  are published back to each parameter's training sharding.
+* ``gather`` — Muon-AG baseline: momentum in training layout, full-matrix NS
+  replicated on every device.
 * ``adamw``  — element-wise baseline for step-time comparisons.
 
+Variants (``MuonConfig.variant``; registry in ``core/api.py``): ``muon``,
+``normuon``, ``muonbp``, ``adamw`` — all sharing the owner-layout pipeline,
+differing only in the orthogonalizer backend (and its per-group state,
+threaded through ``MuonState.variant_state``).
+
 Non-matrix parameters always take AdamW (Alg. 1 line 16).  All modes produce
-*identical* updates up to NS-iteration rounding — tests/test_muon.py + tests/dist_check.py check
-owner == gather == per-matrix reference exactly.
+*identical* updates up to NS-iteration rounding for variant='muon' —
+tests/test_muon.py + tests/dist_check.py check owner == gather == per-matrix
+reference exactly.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dedication import DedicationPlan
-from repro.core.gram_ns import GramNSConfig, gram_newton_schulz
-from repro.core.newton_schulz import newton_schulz
+from repro.core.gram_ns import GramNSConfig
+from repro.core.orthogonalize import make_orthogonalizer
+from repro.core.owner_comms import (  # noqa: F401 — stable re-exports
+    OwnerLayout, _from_owner_staged, _lead_perm, _stacked_spec,
+    _to_owner_staged, group_key_str, owner_sharding, pack_group, unpack_group)
+from repro.core.update_rules import (  # noqa: F401 — stable re-exports
+    AdamWState, adamw_init, adamw_update, apply_wd_and_lr, momentum_update,
+    scale_factor)
+
+# Backwards-compatible aliases (pre-refactor private names).
+_group_key_str = group_key_str
+_scale_factor = scale_factor
+_apply_wd_and_lr = apply_wd_and_lr
 
 
 @dataclass(frozen=True)
@@ -46,6 +67,12 @@ class MuonConfig:
     # 'spectral' = sqrt(max(1, m/n)), 'none' = 1.0
     scale_mode: str = "match_rms_adam"
     mode: str = "owner"                  # 'owner' | 'gather' | 'adamw'
+    # optimizer variant by name (registry in core/api.py):
+    #   'muon'    — plain orthogonalized updates (the paper's optimizer)
+    #   'normuon' — + neuron-wise second-moment normalization (NorMuon)
+    #   'muonbp'  — block-periodic NS refresh every `muonbp_period` steps
+    #   'adamw'   — elementwise baseline (equivalent to mode='adamw')
+    variant: str = "muon"
     momentum_dtype: str = "float32"
     # dtype of the packed owner-layout gradient/momentum math; bf16 for
     # trillion-param configs (memory policy, DESIGN.md §8)
@@ -59,242 +86,26 @@ class MuonConfig:
     # gradient-transpose compression: reduce to owners in bf16 with fp32
     # error-feedback accumulator (distributed-optimization trick; DESIGN §7)
     compress_grads: bool = False
+    # variant knobs
+    normuon_beta2: float = 0.95          # NorMuon neuron second-moment decay
+    normuon_eps: float = 1e-8
+    muonbp_period: int = 4               # full-NS refresh period (1 = every step)
 
 
-def _scale_factor(m: int, n: int, mode: str) -> float:
-    if mode == "match_rms_adam":
-        return 0.2 * float(np.sqrt(max(m, n)))
-    if mode == "spectral":
-        return float(np.sqrt(max(1.0, m / n)))
-    if mode == "none":
-        return 1.0
-    raise ValueError(f"unknown scale_mode {mode!r}")
-
-
-class AdamWState(NamedTuple):
-    mu: Any
-    nu: Any
-
-
-def adamw_init(params) -> AdamWState:
-    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    return AdamWState(mu=zeros,
-                      nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                      params))
-
-
-def adamw_update(grads, state: AdamWState, params, step, cfg: MuonConfig):
-    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
-    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                      state.mu, grads)
-    nu = jax.tree.map(
-        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-        state.nu, grads)
-    t = step.astype(jnp.float32) + 1.0
-    bc1 = 1.0 - b1 ** t
-    bc2 = 1.0 - b2 ** t
-
-    def upd(m, v, p):
-        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-        u = u + cfg.adam_weight_decay * p.astype(jnp.float32)
-        return (-cfg.adam_lr * u).astype(p.dtype)
-
-    updates = jax.tree.map(upd, mu, nu, params)
-    return updates, AdamWState(mu, nu)
+def _resolve(cfg: MuonConfig):
+    """(variant_spec, effective_mode) for ``cfg`` — validates the combo."""
+    from repro.core.api import get_variant   # lazy: api imports this module
+    spec = get_variant(cfg.variant)
+    mode = "adamw" if spec.elementwise else cfg.mode
+    if cfg.mode == "gather" and not spec.elementwise and spec.name != "muon":
+        raise ValueError(
+            f"variant {spec.name!r} requires the owner pipeline "
+            "(mode='owner'); the gather baseline only supports 'muon'")
+    return spec, mode
 
 
 # --------------------------------------------------------------------------
-# Owner-layout pack / unpack (the communication pattern of §3.2)
-# --------------------------------------------------------------------------
-
-def _lead_perm(info, spec) -> tuple:
-    """Permutation of the leaf's leading dims putting sharded dims first
-    (major).  Flattening a sharded-MAJOR axis keeps the merged-axis sharding
-    expressible and every reshape local — the property that lets the owner
-    transpose lower to one same-shape all-to-all instead of XLA's
-    "involuntary full rematerialization" (whole-tensor all-gather)."""
-    n_lead = len(info.shape) - 2
-    if spec is None or n_lead <= 1:
-        return tuple(range(n_lead))
-    lead = list(spec)[:n_lead] if len(spec) >= n_lead else [None] * n_lead
-    return tuple(sorted(range(n_lead), key=lambda i: (lead[i] is None, i)))
-
-
-def _stacked_spec(info, spec):
-    """Training-layout PartitionSpec of the (count, m, n) stacked view."""
-    from jax.sharding import PartitionSpec as P
-    if spec is None:
-        return None
-    n_lead = len(info.shape) - 2
-    lead = list(spec)[:n_lead]
-    perm = _lead_perm(info, spec)
-    major = lead[perm[0]] if n_lead and perm and lead[perm[0]] is not None \
-        else None
-    m_spec = spec[-2] if len(spec) >= 2 else None
-    n_spec = spec[-1] if len(spec) >= 1 else None
-    if info.transpose:
-        m_spec, n_spec = n_spec, m_spec
-    return P(major, m_spec, n_spec)
-
-
-def _leaf_to_matrices(arr: jax.Array, info, spec=None) -> jax.Array:
-    """(lead..., m0, n0) -> (count, m, n) with m <= n, sharded-major order."""
-    m0, n0 = info.shape[-2:]
-    perm = _lead_perm(info, spec)
-    n_lead = arr.ndim - 2
-    if perm != tuple(range(n_lead)):
-        arr = jnp.transpose(arr, perm + (n_lead, n_lead + 1))
-    flat = arr.reshape((-1, m0, n0))
-    return flat.mT if info.transpose else flat
-
-
-def _matrices_to_leaf(flat: jax.Array, info, spec=None) -> jax.Array:
-    if info.transpose:
-        flat = flat.mT
-    perm = _lead_perm(info, spec)
-    n_lead = len(info.shape) - 2
-    if perm != tuple(range(n_lead)):
-        permuted_shape = tuple(info.shape[i] for i in perm) + info.shape[-2:]
-        inv = tuple(np.argsort(perm)) + (n_lead, n_lead + 1)
-        return jnp.transpose(flat.reshape(permuted_shape), inv)
-    return flat.reshape(info.shape)
-
-
-def pack_group(plan: DedicationPlan, key, leaf_values: Dict[str, jax.Array],
-               mesh=None) -> jax.Array:
-    """Stack a shape group's matrices into the owner-major padded layout.
-
-    Output: (num_owners * capacity, m, n); position p belongs to owner
-    p // capacity.  With known training specs the stacked view is explicitly
-    constrained so the only communication is the same-shape axis-0
-    redistribution applied afterwards by the owner constraint.
-    """
-    g = plan.groups[key]
-    specs = getattr(plan, "train_specs", None) or {}
-    parts = []
-    for p in g.leaf_paths:
-        spec = specs.get(p)
-        part = _leaf_to_matrices(leaf_values[p], plan.leaves[p], spec)
-        st_spec = _stacked_spec(plan.leaves[p], spec)
-        if mesh is not None and st_spec is not None:
-            from jax.sharding import NamedSharding
-            part = jax.lax.with_sharding_constraint(
-                part, NamedSharding(mesh, st_spec))
-        parts.append(part)
-    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
-    m, n = g.key
-    n_pad = g.packed_size - g.count
-    if np.array_equal(g.pack_index[:g.count], np.arange(g.count)):
-        # contiguous physical layout: pure pad — partitions as a local op
-        if n_pad == 0:
-            return flat
-        return jnp.concatenate(
-            [flat, jnp.zeros((n_pad, m, n), flat.dtype)], axis=0)
-    pad = jnp.zeros((1, m, n), flat.dtype)
-    flat_ext = jnp.concatenate([flat, pad], axis=0)
-    idx = np.where(g.pack_index < 0, g.count, g.pack_index)
-    return jnp.take(flat_ext, jnp.asarray(idx), axis=0)
-
-
-def unpack_group(plan: DedicationPlan, key, packed: jax.Array,
-                 mesh=None) -> Dict[str, jax.Array]:
-    """Inverse of pack_group: owner-major stack -> per-leaf arrays.
-
-    The publish reshard (owner layout -> training layout) happens HERE at the
-    padded stacked shape — a same-shape axis redistribution (all-to-all) —
-    before any slice/transpose/reshape, all of which are then sharding-local.
-    """
-    g = plan.groups[key]
-    specs = getattr(plan, "train_specs", None) or {}
-    if len(g.leaf_paths) == 1 and mesh is not None:
-        p = g.leaf_paths[0]
-        st_spec = _stacked_spec(plan.leaves[p], specs.get(p))
-        if st_spec is not None:
-            packed = _from_owner_staged(packed, st_spec, plan, mesh)
-    if np.array_equal(g.unpack_index, np.arange(g.count)):
-        flat = packed[:g.count]            # contiguous layout: pure slice
-    else:
-        flat = jnp.take(packed, jnp.asarray(g.unpack_index), axis=0)
-    out: Dict[str, jax.Array] = {}
-    start = 0
-    for p in g.leaf_paths:
-        info = plan.leaves[p]
-        out[p] = _matrices_to_leaf(flat[start:start + info.count], info,
-                                   specs.get(p))
-        start += info.count
-    return out
-
-
-def owner_sharding(plan: DedicationPlan, mesh):
-    """NamedSharding for the stacked owner-major buffers (axis 0 sharded)."""
-    if mesh is None:
-        return None
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    axes = plan.owner_axes or tuple(mesh.axis_names)
-    return NamedSharding(mesh, P(axes, None, None))
-
-
-def _constrain(x, sharding):
-    if sharding is None:
-        return x
-    return jax.lax.with_sharding_constraint(x, sharding)
-
-
-def _to_owner_staged(x, stacked_spec, plan, mesh):
-    """Training-stacked layout -> owner layout, one mesh axis per stage.
-
-    Each stage moves a single mesh axis from a matrix dim onto the stack
-    axis — a reshard GSPMD lowers as a true all-to-all.  Jumping directly to
-    the owner spec lets XLA resolve the two-axis move "through replication"
-    (full-tensor all-gathers), a TB-scale temp at 340B+ scale; see
-    EXPERIMENTS.md §Perf (nemotron train iteration).
-    """
-    if mesh is None:
-        return x
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    axes = plan.owner_axes or tuple(mesh.axis_names)
-    cur = list(stacked_spec) if stacked_spec is not None else [None] * 3
-    while len(cur) < 3:
-        cur.append(None)
-    front = list(cur[0]) if isinstance(cur[0], tuple) else \
-        ([cur[0]] if cur[0] is not None else [])
-    for ax in axes:
-        if ax in front:
-            continue
-        rest = [None if d == ax else d for d in cur[1:]]
-        front = front + [ax]
-        cur = [tuple(front)] + rest
-        x = jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, P(*cur)))
-    return x
-
-
-def _from_owner_staged(x, stacked_spec, plan, mesh):
-    """Owner layout -> training-stacked layout (publish), staged in reverse:
-    one axis leaves the stack dim per stage (an all-to-all back to its matrix
-    dim, or an all-gather when the training layout doesn't use it)."""
-    if mesh is None:
-        return x
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    axes = list(plan.owner_axes or tuple(mesh.axis_names))
-    target = list(stacked_spec) if stacked_spec is not None else [None] * 3
-    while len(target) < 3:
-        target.append(None)
-    front = list(axes)
-    rest = [None, None]
-    for ax in reversed(axes):
-        front = [a for a in front if a != ax]
-        for di in (1, 2):
-            if target[di] == ax:
-                rest[di - 1] = ax
-        lead = tuple(front) if front else target[0]
-        x = jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, P(lead, rest[0], rest[1])))
-    return x
-
-
-# --------------------------------------------------------------------------
-# The Muon update
+# Optimizer state
 # --------------------------------------------------------------------------
 
 class MuonState(NamedTuple):
@@ -304,10 +115,9 @@ class MuonState(NamedTuple):
     momentum: Any
     adamw: AdamWState            # state for non-matrix leaves
     error_feedback: Any = None   # fp32 residual for compressed grad transpose
-
-
-def _group_key_str(key) -> str:
-    return key.replace("/", ".") if isinstance(key, str) else f"{key[0]}x{key[1]}"
+    # per-variant orthogonalizer state (owner-major buffers), e.g. NorMuon's
+    # neuron-wise second moments or MuonBP's cached polar accumulators
+    variant_state: Any = None
 
 
 def _matrix_and_rest(plan: DedicationPlan, tree):
@@ -335,24 +145,27 @@ def _rebuild(tree_like, matrix: Dict[str, Any], rest: Dict[str, Any]):
 def muon_init(plan: DedicationPlan, params, cfg: MuonConfig, mesh=None
               ) -> MuonState:
     matrix, rest, _ = _matrix_and_rest(plan, params)
+    spec, mode = _resolve(cfg)
+    layout = OwnerLayout(plan, mesh)
     mdt = jnp.dtype(cfg.momentum_dtype)
-    if cfg.mode == "owner":
-        shard = owner_sharding(plan, mesh)
-        momentum = {}
-        for key, g in plan.groups.items():
-            m, n = g.key
-            buf = jnp.zeros((g.packed_size, m, n), mdt)
-            momentum[_group_key_str(key)] = _constrain(buf, shard)
-    elif cfg.mode == "gather":
+    variant_state = None
+    if mode == "owner":
+        momentum = {group_key_str(key): layout.zeros(key, mdt)
+                    for key in plan.groups}
+        if spec.stateful:
+            ortho = make_orthogonalizer(spec.orthogonalizer, cfg)
+            variant_state = ortho.init_state(layout, cfg)
+    elif mode == "gather":
         momentum = {p: jnp.zeros(v.shape, mdt) for p, v in matrix.items()}
     else:  # adamw for everything
         momentum = {}
         rest = {**rest, **matrix}
     ef = None
-    if cfg.compress_grads and cfg.mode == "owner":
+    if cfg.compress_grads and mode == "owner":
         ef = {p: jnp.zeros(v.shape, jnp.float32) for p, v in matrix.items()}
     return MuonState(step=jnp.zeros((), jnp.int32), momentum=momentum,
-                     adamw=adamw_init(rest), error_feedback=ef)
+                     adamw=adamw_init(rest), error_feedback=ef,
+                     variant_state=variant_state)
 
 
 def muon_update(plan: DedicationPlan, grads, state: MuonState, params,
@@ -361,46 +174,39 @@ def muon_update(plan: DedicationPlan, grads, state: MuonState, params,
     to be *added* to params (optax convention)."""
     gm, gr, _ = _matrix_and_rest(plan, grads)
     pm, pr, _ = _matrix_and_rest(plan, params)
+    spec, mode = _resolve(cfg)
 
-    if cfg.mode == "adamw":
+    if mode == "adamw":
         gr, pr = {**gr, **gm}, {**pr, **pm}
         adam_updates, adamw_state = adamw_update(gr, state.adamw, pr,
                                                  state.step, cfg)
         updates = _rebuild(grads, {}, adam_updates)
         return updates, MuonState(state.step + 1, state.momentum, adamw_state,
-                                  state.error_feedback)
+                                  state.error_feedback, state.variant_state)
 
     adam_updates, adamw_state = adamw_update(gr, state.adamw, pr, state.step,
                                              cfg)
 
-    if cfg.mode == "owner":
-        matrix_updates, new_momentum, new_ef = _owner_update(
-            plan, gm, pm, state, cfg, mesh)
-    elif cfg.mode == "gather":
-        matrix_updates, new_momentum = _gather_update(plan, gm, pm, state, cfg)
-        new_ef = state.error_feedback
+    if mode == "owner":
+        matrix_updates, new_momentum, new_ef, new_vstate = _owner_update(
+            plan, gm, pm, state, cfg, mesh, spec)
+    elif mode == "gather":
+        matrix_updates, new_momentum = _gather_update(plan, gm, pm, state,
+                                                      cfg, mesh)
+        new_ef, new_vstate = state.error_feedback, state.variant_state
     else:
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
     updates = _rebuild(grads, matrix_updates, adam_updates)
     return updates, MuonState(state.step + 1, new_momentum, adamw_state,
-                              new_ef)
-
-
-def _apply_wd_and_lr(update, param, cfg: MuonConfig):
-    # fp32 update math when the master params are fp32; for bf16-master
-    # configs (DESIGN.md §8) stay in bf16 — the fp32 temp would be the
-    # largest buffer in the program.
-    cd = jnp.float32 if param.dtype == jnp.float32 else param.dtype
-    u = update.astype(cd) + cfg.weight_decay * param.astype(cd)
-    return (-cfg.learning_rate * u).astype(param.dtype)
+                              new_ef, new_vstate)
 
 
 def _owner_update(plan: DedicationPlan, gm, pm, state: MuonState,
-                  cfg: MuonConfig, mesh):
-    """DMuon path: pack → momentum → batched Gram NS (per Gram bucket) →
+                  cfg: MuonConfig, mesh, spec):
+    """DMuon path: pack → momentum → orthogonalize (pluggable backend) →
     unpack/publish.  Alg. 1 lines 10–15 in SPMD form."""
-    shard = owner_sharding(plan, mesh)
+    layout = OwnerLayout(plan, mesh)
     new_momentum: Dict[str, jax.Array] = {}
     new_ef = state.error_feedback
 
@@ -418,139 +224,59 @@ def _owner_update(plan: DedicationPlan, gm, pm, state: MuonState,
         grads_for_pack = compressed
 
     pdt = jnp.dtype(cfg.pack_dtype)
-    specs = getattr(plan, "train_specs", None) or {}
-    packed_mom: Dict[Any, jax.Array] = {}
-    for key in plan.groups:
-        g = plan.groups[key]
-        g_packed = pack_group(plan, key, {
-            p: grads_for_pack[p] for p in g.leaf_paths}, mesh=mesh)
-        st_spec = (_stacked_spec(plan.leaves[g.leaf_paths[0]],
-                                 specs.get(g.leaf_paths[0]))
-                   if len(g.leaf_paths) == 1 else None)
-        g_packed = _to_owner_staged(g_packed.astype(pdt), st_spec, plan, mesh)
-        g_packed = _constrain(g_packed, shard)
-        mom = state.momentum[_group_key_str(key)].astype(pdt)
-        mom = cfg.momentum * mom + g_packed
-        new_momentum[_group_key_str(key)] = _constrain(
-            mom.astype(jnp.dtype(cfg.momentum_dtype)), shard)
-        eff = g_packed + cfg.momentum * mom if cfg.nesterov else mom
-        packed_mom[key] = _constrain(eff, shard)
+    packed_mom: Dict[str, jax.Array] = {}
+    skey_to_key = {group_key_str(key): key for key in plan.groups}
+    for key, g in plan.groups.items():
+        g_packed = layout.pack(key, {p: grads_for_pack[p].astype(pdt)
+                                     for p in g.leaf_paths})
+        skey = group_key_str(key)
+        mom = state.momentum[skey].astype(pdt)
+        mom, eff = momentum_update(mom, g_packed, cfg)
+        new_momentum[skey] = layout.constrain(
+            mom.astype(jnp.dtype(cfg.momentum_dtype)))
+        packed_mom[skey] = layout.constrain(eff)
 
-    # --- owner-side batched Gram NS.  With bucket_fusion the m×m iteration
-    # phase is batched across all groups sharing a Gram dimension (paper
-    # §3.3 shape-batched execution at its widest); otherwise per-group.
-    ortho: Dict[Any, jax.Array] = {}
-    if cfg.ns.bucket_fusion:
-        ortho = _sharded_gram_ns_fused(packed_mom, cfg.ns, mesh, plan)
-    else:
-        for key in plan.groups:
-            ortho[key] = _sharded_gram_ns(packed_mom[key], cfg.ns, mesh,
-                                          plan)
+    # --- owner-side orthogonalization via the variant's pluggable backend
+    # (batched Gram NS by default; bucket-fused / NorMuon / MuonBP by name).
+    ortho_fn = make_orthogonalizer(spec.orthogonalizer, cfg)
+    ortho, new_vstate = ortho_fn(packed_mom, step=state.step,
+                                 state=state.variant_state, layout=layout,
+                                 cfg=cfg)
 
     # --- publication: owner layout -> training layout + scale/wd/lr.
     # The resharded tensor stays in pack_dtype; fp32 casting before the
     # all-to-all would double the publish volume (and at 1T scale the fp32
     # temp alone exceeds HBM).
     matrix_updates: Dict[str, jax.Array] = {}
-    for key in plan.groups:
+    for skey, o in ortho.items():
+        key = skey_to_key[skey]
         m, n = plan.groups[key].key
-        s = _scale_factor(m, n, cfg.scale_mode)
-        per_leaf = unpack_group(plan, key, ortho[key].astype(pdt) * s,
-                                mesh=mesh)
+        s = scale_factor(m, n, cfg.scale_mode)
+        per_leaf = layout.unpack(key, o.astype(pdt) * s)
         for p, upd in per_leaf.items():
-            matrix_updates[p] = _apply_wd_and_lr(upd, pm[p], cfg)
-    return matrix_updates, new_momentum, new_ef
-
-
-def _sharded_gram_ns(packed: jax.Array, ns_cfg: GramNSConfig, mesh,
-                     plan: DedicationPlan) -> jax.Array:
-    """Run batched Gram NS on the owner-sharded stack.
-
-    Under a mesh, shard_map with P(owner_axes) on the stack axis makes the
-    computation provably local (no collectives inside); each device
-    orthogonalizes only its own matrices.  Without a mesh (unit tests), plain
-    batched execution.
-    """
-    base = functools.partial(gram_newton_schulz, cfg=ns_cfg,
-                             assume_short_fat=True)
-
-    def fn(x):
-        if ns_cfg.owner_chunk and x.shape[0] > ns_cfg.owner_chunk \
-                and x.shape[0] % ns_cfg.owner_chunk == 0:
-            # bound the live Gram working set: sequential chunks of the
-            # owner-local batch (memory policy for 1T-class censuses)
-            xc = x.reshape((-1, ns_cfg.owner_chunk) + x.shape[1:])
-            return jax.lax.map(base, xc).reshape(x.shape)
-        return base(x)
-
-    if mesh is None:
-        return fn(packed)
-    from jax.sharding import PartitionSpec as P
-    axes = plan.owner_axes or tuple(mesh.axis_names)
-    spec = P(axes, None, None)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(
-        packed)
-
-
-def _sharded_gram_ns_fused(packed: Dict[Any, jax.Array],
-                           ns_cfg: GramNSConfig, mesh,
-                           plan: DedicationPlan) -> Dict[Any, jax.Array]:
-    """Bucket-fused owner NS: one batched m×m recurrence per Gram bucket.
-
-    Phases (core/gram_ns.py): per-group prepare (normalize + SYRK, shapes
-    differ in n), concat the Gram stacks of every group in the bucket,
-    ONE batched iterate, split Q back, per-group finish (Q·X₀).  All inside
-    a single shard_map so the whole optimizer phase is one local region."""
-    import functools as _ft
-
-    from repro.core.gram_ns import gram_finish, gram_iterate, gram_prepare
-
-    def run(stacks: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-        out: Dict[str, jax.Array] = {}
-        for m_dim, keys in plan.buckets.items():
-            keys_here = [k for k in keys if k in stacks]
-            if not keys_here:
-                continue
-            x0s, gs, sizes = [], [], []
-            for k in keys_here:
-                x0, g = gram_prepare(stacks[k], ns_cfg)
-                x0s.append(x0)
-                gs.append(g)
-                sizes.append(g.shape[0])
-            q_all = gram_iterate(jnp.concatenate(gs, axis=0), ns_cfg)
-            off = 0
-            for k, x0, sz in zip(keys_here, x0s, sizes):
-                out[k] = gram_finish(q_all[off:off + sz], x0,
-                                     stacks[k].dtype)
-                off += sz
-        return out
-
-    if mesh is None:
-        return run(packed)
-    from jax.sharding import PartitionSpec as P
-    axes = plan.owner_axes or tuple(mesh.axis_names)
-    spec = P(axes, None, None)
-    in_specs = ({k: spec for k in packed},)
-    out_specs = {k: spec for k in packed}
-    return jax.shard_map(run, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs)(packed)
+            matrix_updates[p] = apply_wd_and_lr(upd, pm[p], cfg)
+    return matrix_updates, new_momentum, new_ef, new_vstate
 
 
 def _gather_update(plan: DedicationPlan, gm, pm, state: MuonState,
-                   cfg: MuonConfig):
+                   cfg: MuonConfig, mesh=None):
     """Muon-AG baseline: momentum in training layout; full-matrix standard NS
     computed redundantly on every device (SPMD: replicated compute)."""
+    from repro.core.orthogonalize import FullMatrixNS
+    layout = OwnerLayout(plan, mesh)
     new_momentum: Dict[str, jax.Array] = {}
-    matrix_updates: Dict[str, jax.Array] = {}
+    eff_all: Dict[str, jax.Array] = {}
     for p, g in gm.items():
-        info = plan.leaves[p]
         g32 = g.astype(jnp.float32)
-        mom = cfg.momentum * state.momentum[p].astype(jnp.float32) + g32
+        mom, eff = momentum_update(state.momentum[p].astype(jnp.float32),
+                                   g32, cfg)
         new_momentum[p] = mom.astype(jnp.dtype(cfg.momentum_dtype))
-        eff = g32 + cfg.momentum * mom if cfg.nesterov else mom
-        o = newton_schulz(eff, num_steps=cfg.ns.num_steps,
-                          schedule=cfg.ns.schedule)
-        m, n = info.group
-        s = _scale_factor(m, n, cfg.scale_mode)
-        matrix_updates[p] = _apply_wd_and_lr(o * s, pm[p], cfg)
+        eff_all[p] = eff
+    ortho, _ = FullMatrixNS()(eff_all, step=state.step, state=None,
+                              layout=layout, cfg=cfg)
+    matrix_updates: Dict[str, jax.Array] = {}
+    for p, o in ortho.items():
+        m, n = plan.leaves[p].group
+        s = scale_factor(m, n, cfg.scale_mode)
+        matrix_updates[p] = apply_wd_and_lr(o * s, pm[p], cfg)
     return matrix_updates, new_momentum

@@ -1,0 +1,272 @@
+"""Pluggable orthogonalization backends (the NS layer of the optimizer).
+
+The DMuon pipeline factors into layout → orthogonalize → update rule; this
+module is the middle layer.  Every backend implements the same protocol:
+
+    class Orthogonalizer:
+        name: str
+        def init_state(self, layout, cfg) -> dict | None: ...
+        def __call__(self, stacks, *, step, state, layout, cfg)
+            -> (ortho_stacks, new_state)
+
+``stacks`` is a dict of owner-major (D·cap, m, n) buffers keyed by the
+sanitized group key (``group_key_str``); ``layout`` is the bound
+:class:`~repro.core.owner_comms.OwnerLayout`; ``cfg`` is the MuonConfig
+(duck-typed — only ``ns`` and the variant knobs are read).  Stateless
+backends return ``state`` unchanged (None).
+
+Backends:
+
+  gram           — batched Gram Newton-Schulz per shape group (the default
+                   DMuon path, provably local under shard_map).
+  gram_fused     — one batched m×m Gram recurrence per Gram bucket
+                   (paper §3.3 shape-batched execution at its widest).
+  full_ns        — full-matrix standard NS (the Muon-AG baseline compute).
+  normuon        — NorMuon (arXiv:2510.05491): wraps a base backend and adds
+                   neuron-wise second-moment normalization of the
+                   orthogonalized update, rescaled to preserve each matrix's
+                   update norm.  State: one (D·cap, m) fp32 moment per group.
+  block_periodic — MuonBP (arXiv:2510.16981): full Gram NS only every
+                   ``cfg.muonbp_period`` steps; in between, the cached polar
+                   accumulator Q (a polynomial in the refresh-step Gram
+                   matrix) is reapplied to the fresh normalized momentum —
+                   one m×n GEMM instead of the whole iteration.  State: one
+                   (D·cap, m, m) fp32 Q cache per group.  With period 1 every
+                   step refreshes, which is bit-identical to ``gram``.
+
+``make_orthogonalizer(cfg)`` resolves a MuonConfig to a composed backend via
+the registry; the variant → backend mapping lives with the variant registry
+in ``core/api.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gram_ns import (GramNSConfig, gram_finish, gram_iterate,
+                                gram_newton_schulz, gram_prepare)
+from repro.core.newton_schulz import newton_schulz
+from repro.core.owner_comms import OwnerLayout, group_key_str
+
+_EPS = 1e-7
+
+
+class Orthogonalizer:
+    """Protocol base: stateless identity-free orthogonalizer."""
+
+    name = "base"
+
+    def init_state(self, layout: OwnerLayout, cfg) -> Optional[dict]:
+        return None
+
+    def __call__(self, stacks: Dict[str, jax.Array], *, step, state,
+                 layout: OwnerLayout, cfg):
+        raise NotImplementedError
+
+
+class GramNS(Orthogonalizer):
+    """Batched Gram NS per shape group — the owner-local DMuon default."""
+
+    name = "gram"
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ns = cfg.ns
+        base = functools.partial(gram_newton_schulz, cfg=ns,
+                                 assume_short_fat=True)
+
+        def one(x):
+            if ns.owner_chunk and x.shape[0] > ns.owner_chunk \
+                    and x.shape[0] % ns.owner_chunk == 0:
+                # bound the live Gram working set: sequential chunks of the
+                # owner-local batch (memory policy for 1T-class censuses)
+                xc = x.reshape((-1, ns.owner_chunk) + x.shape[1:])
+                return jax.lax.map(base, xc).reshape(x.shape)
+            return base(x)
+
+        out = {k: layout.shard_local(one, v) for k, v in stacks.items()}
+        return out, state
+
+
+class BucketFusedGramNS(Orthogonalizer):
+    """Bucket-fused owner NS: one batched m×m recurrence per Gram bucket.
+
+    Phases (core/gram_ns.py): per-group prepare (normalize + SYRK, shapes
+    differ in n), concat the Gram stacks of every group in the bucket,
+    ONE batched iterate, split Q back, per-group finish (Q·X₀).  All inside
+    a single shard_map so the whole optimizer phase is one local region."""
+
+    name = "gram_fused"
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ns = cfg.ns
+        buckets = layout.plan.buckets
+
+        def run(sts: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+            out: Dict[str, jax.Array] = {}
+            for m_dim, keys in buckets.items():
+                keys_here = [group_key_str(k) for k in keys
+                             if group_key_str(k) in sts]
+                if not keys_here:
+                    continue
+                x0s, gs, sizes = [], [], []
+                for k in keys_here:
+                    x0, g = gram_prepare(sts[k], ns)
+                    x0s.append(x0)
+                    gs.append(g)
+                    sizes.append(g.shape[0])
+                q_all = gram_iterate(jnp.concatenate(gs, axis=0), ns)
+                off = 0
+                for k, x0, sz in zip(keys_here, x0s, sizes):
+                    out[k] = gram_finish(q_all[off:off + sz], x0,
+                                         sts[k].dtype)
+                    off += sz
+            return out
+
+        return layout.shard_local(run, stacks), state
+
+
+class FullMatrixNS(Orthogonalizer):
+    """Full-matrix standard NS — the replicated Muon-AG baseline compute.
+    Accepts arbitrarily-shaped (..., r, c) leaves (training layout)."""
+
+    name = "full_ns"
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        out = {k: newton_schulz(v, num_steps=cfg.ns.num_steps,
+                                schedule=cfg.ns.schedule)
+               for k, v in stacks.items()}
+        return out, state
+
+
+class NeuronwiseNorm(Orthogonalizer):
+    """NorMuon-style neuron-wise normalization on top of a base backend.
+
+    After orthogonalization, each output row (neuron) is divided by the
+    bias-corrected RMS of its own update history (second moment with decay
+    ``cfg.normuon_beta2``), then the whole matrix is rescaled to its
+    pre-normalization Frobenius norm — equalizing per-neuron effective rates
+    without disturbing the update magnitude the scale rule expects.
+    All ops are elementwise/rowwise on the stack, so they partition locally
+    along the owner axis without an explicit shard_map.
+    """
+
+    name = "normuon"
+
+    def __init__(self, inner: Orthogonalizer):
+        self.inner = inner
+
+    def init_state(self, layout, cfg):
+        v = {group_key_str(k): layout.zeros(k, jnp.float32,
+                                            trailing=(layout.plan.groups[k].key[0],))
+             for k in layout.group_keys}
+        return {"v": v, "inner": self.inner.init_state(layout, cfg)}
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ortho, inner_state = self.inner(stacks, step=step,
+                                        state=state.get("inner"),
+                                        layout=layout, cfg=cfg)
+        b2 = cfg.normuon_beta2
+        eps = cfg.normuon_eps
+        bc = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+        new_v: Dict[str, jax.Array] = {}
+        out: Dict[str, jax.Array] = {}
+        for k, o in ortho.items():
+            o32 = o.astype(jnp.float32)
+            row_ms = jnp.mean(jnp.square(o32), axis=-1)            # (B, m)
+            v = b2 * state["v"][k] + (1.0 - b2) * row_ms
+            new_v[k] = layout.constrain_buffer(v)
+            o_n = o32 / (jnp.sqrt(v / bc) + eps)[..., None]
+            norm = jnp.linalg.norm(o32, axis=(-2, -1), keepdims=True)
+            norm_n = jnp.linalg.norm(o_n, axis=(-2, -1), keepdims=True)
+            out[k] = (o_n * norm / (norm_n + _EPS)).astype(o.dtype)
+        return out, {"v": new_v, "inner": inner_state}
+
+
+class BlockPeriodicGramNS(Orthogonalizer):
+    """MuonBP-style block-periodic orthogonalization.
+
+    Refresh steps (``step % cfg.muonbp_period == 0``) run the full Gram NS
+    and cache the polar accumulator Q_k; in-between steps reuse the cached
+    Q on the freshly normalized momentum — amortizing the 4k−3 symmetric
+    products of the iteration down to a single m×n product per step."""
+
+    name = "block_periodic"
+
+    def init_state(self, layout, cfg):
+        q = {group_key_str(k): layout.zeros(
+                k, jnp.float32,
+                trailing=(layout.plan.groups[k].key[0],) * 2)
+             for k in layout.group_keys}
+        return {"q": q}
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ns = cfg.ns
+        cdtype = jnp.dtype(ns.compute_dtype)
+
+        def do_refresh(operands):
+            sts, _ = operands
+
+            def run(sts_in):
+                out, newq = {}, {}
+                for k, x in sts_in.items():
+                    x0, g = gram_prepare(x, ns)
+                    q = gram_iterate(g, ns)
+                    out[k] = gram_finish(q, x0, x.dtype)
+                    newq[k] = q.astype(jnp.float32)
+                return out, newq
+
+            return layout.shard_local(run, sts)
+
+        def do_reuse(operands):
+            sts, qs = operands
+
+            def run(args):
+                sts_in, qs_in = args["stacks"], args["q"]
+                out = {}
+                for k, x in sts_in.items():
+                    norm = jnp.sqrt(jnp.sum(
+                        jnp.square(x.astype(jnp.float32)),
+                        axis=(-2, -1), keepdims=True))
+                    x0 = x.astype(cdtype) / (norm + _EPS).astype(cdtype)
+                    out[k] = gram_finish(qs_in[k].astype(cdtype), x0, x.dtype)
+                return out, qs_in
+
+            return layout.shard_local(run, {"stacks": sts, "q": qs})
+
+        period = max(1, int(cfg.muonbp_period))
+        if period == 1:
+            out, new_q = do_refresh((stacks, state["q"]))
+        else:
+            out, new_q = jax.lax.cond(step % period == 0, do_refresh,
+                                      do_reuse, (stacks, state["q"]))
+        return out, {"q": new_q}
+
+
+ORTHOGONALIZERS = {
+    "gram": GramNS,
+    "gram_fused": BucketFusedGramNS,
+    "full_ns": FullMatrixNS,
+    "block_periodic": BlockPeriodicGramNS,
+}
+
+
+def make_orthogonalizer(name: str, cfg) -> Orthogonalizer:
+    """Build the backend for ``name``, honoring ``cfg.ns.bucket_fusion``.
+
+    ``"normuon"`` composes the neuron-wise normalizer over the base Gram
+    path; ``"auto"`` is the plain DMuon dispatch (fused when configured)."""
+    base = BucketFusedGramNS() if cfg.ns.bucket_fusion else GramNS()
+    if name in ("auto", "gram_auto"):
+        return base
+    if name == "normuon":
+        return NeuronwiseNorm(base)
+    try:
+        return ORTHOGONALIZERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown orthogonalizer {name!r}; "
+            f"known: {sorted(ORTHOGONALIZERS) + ['auto', 'normuon']}")

@@ -1,0 +1,98 @@
+"""Update rules: momentum, scaling, weight decay, AdamW — the third layer.
+
+``core/owner_comms.py`` decides where tensors live, ``core/orthogonalize.py``
+decides how a matrix update is orthogonalized, and this module decides what
+scalar math wraps those matrices: the heavy-ball/Nesterov momentum applied in
+owner layout, the RMS-matching scale factor, weight decay + learning rate,
+and the elementwise AdamW used for non-matrix leaves (and for the pure-AdamW
+baseline variant).
+
+``VariantSpec`` describes a named optimizer variant (the registry itself is
+the user surface and lives in ``core/api.py``): which orthogonalizer backend
+the owner pipeline dispatches to, and whether the variant bypasses the matrix
+pipeline entirely (AdamW).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """A named optimizer variant, resolved by ``MuonConfig.variant``."""
+    name: str
+    orthogonalizer: str         # registry key in core/orthogonalize.py
+    description: str = ""
+    elementwise: bool = False   # True: no matrix pipeline at all (AdamW)
+    stateful: bool = False      # carries per-group variant state
+
+
+def scale_factor(m: int, n: int, mode: str) -> float:
+    if mode == "match_rms_adam":
+        return 0.2 * float(np.sqrt(max(m, n)))
+    if mode == "spectral":
+        return float(np.sqrt(max(1.0, m / n)))
+    if mode == "none":
+        return 1.0
+    raise ValueError(f"unknown scale_mode {mode!r}")
+
+
+def momentum_update(mom: jax.Array, grad: jax.Array, cfg):
+    """Heavy-ball momentum in the layout of its inputs.
+
+    Returns ``(new_momentum, effective)`` where ``effective`` is what the
+    orthogonalizer consumes (the Nesterov look-ahead when configured)."""
+    new_mom = cfg.momentum * mom + grad
+    eff = grad + cfg.momentum * new_mom if cfg.nesterov else new_mom
+    return new_mom, eff
+
+
+def apply_wd_and_lr(update: jax.Array, param: jax.Array, cfg) -> jax.Array:
+    # fp32 update math when the master params are fp32; for bf16-master
+    # configs (DESIGN.md §8) stay in bf16 — the fp32 temp would be the
+    # largest buffer in the program.
+    cd = jnp.float32 if param.dtype == jnp.float32 else param.dtype
+    u = update.astype(cd) + cfg.weight_decay * param.astype(cd)
+    return (-cfg.learning_rate * u).astype(param.dtype)
+
+
+# --------------------------------------------------------------------------
+# AdamW (non-matrix leaves + the elementwise baseline variant)
+# --------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=zeros,
+                      nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                      params))
+
+
+def adamw_update(grads, state: AdamWState, params, step, cfg):
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(m, v, p):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + cfg.adam_weight_decay * p.astype(jnp.float32)
+        return (-cfg.adam_lr * u).astype(p.dtype)
+
+    updates = jax.tree.map(upd, mu, nu, params)
+    return updates, AdamWState(mu, nu)

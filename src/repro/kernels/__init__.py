@@ -9,4 +9,18 @@ Modules:
   autotune   — block-shape search + persistent cache (paper Fig. 6)
 """
 
-from repro.kernels import autotune, ops, ref  # noqa: F401
+from jax.experimental.pallas import tpu as _pltpu
+
+# The compiler-params container was renamed across JAX releases
+# (TPUCompilerParams -> CompilerParams).  Resolve whichever this JAX
+# provides once, here, so every kernel module stays version-agnostic.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build pltpu compiler params under either API spelling."""
+    return CompilerParams(**kwargs)
+
+
+from repro.kernels import autotune, ops, ref  # noqa: E402,F401

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.symmul import tri_index_tables
+from repro.kernels import tpu_compiler_params
 
 
 def _syrk_kernel(idx_i, idx_j, xi_ref, xj_ref, o_ref, acc_ref, *, nk: int):
@@ -93,7 +94,7 @@ def syrk_lower(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((batch, mp, mp), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         name="gram_syrk",
     )(jnp.asarray(ii), jnp.asarray(jj), x_p, x_p)

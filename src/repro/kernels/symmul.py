@@ -39,6 +39,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def tri_index_tables(n_blocks: int) -> tuple[np.ndarray, np.ndarray]:
     """Host-side (i, j) coordinates of the block-lower triangle, row-major."""
@@ -167,7 +169,7 @@ def symmul_lower(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((batch, mp, mp), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         name=f"symmul_{epilogue}",
     )(jnp.asarray(ii), jnp.asarray(jj), *operands)

@@ -156,7 +156,9 @@ def init_state(cfg, opt: Muon, key, mesh=None, *, zero3: bool = False):
 
 def _opt_state_shardings(opt: Muon, opt_shapes, pspecs, mesh):
     """Momentum: owner layout (fully sharded stacks) for mode='owner';
-    AdamW moments follow their parameter's sharding."""
+    per-variant state (NorMuon neuron moments, MuonBP polar caches) shards
+    the same way — owner-major axis 0, trailing dims replicated; AdamW
+    moments follow their parameter's sharding."""
     from repro.core.muon import owner_sharding
 
     flat_pspecs = {}
@@ -188,5 +190,10 @@ def _opt_state_shardings(opt: Muon, opt_shapes, pspecs, mesh):
                          nu=mom_shard("", opt_shapes.adamw.nu))
     ef = opt_shapes.error_feedback
     ef_sh = None if ef is None else mom_shard("", ef)
+    vs = opt_shapes.variant_state
+    vs_sh = None if vs is None else jax.tree.map(
+        lambda leaf: owner_sharding(opt.plan, mesh, ndim=leaf.ndim)
+        or NamedSharding(mesh, P()), vs)
     return MuonState(step=NamedSharding(mesh, P()), momentum=mom_sh,
-                     adamw=adam_sh, error_feedback=ef_sh)
+                     adamw=adam_sh, error_feedback=ef_sh,
+                     variant_state=vs_sh)

@@ -71,3 +71,117 @@ def test_reshard_momentum_padding_is_zero():
         assert buf.shape[0] == g.packed_size
         if g.packed_size > g.count:
             assert np.all(buf[g.count:] == 0)        # pads stay zero
+
+
+# ----------------------------------------------------------------------
+# reshard_owner_state round-trips (D -> D' -> D), incl. non-contiguous
+# pack layouts and per-variant owner state
+# ----------------------------------------------------------------------
+
+def _logical_rows(plan, key, buf):
+    g = plan.groups[key]
+    return np.take(np.asarray(buf, dtype=np.float32), g.unpack_index, axis=0)
+
+
+def _stack_plan(num_owners, physical_layout="contiguous",
+                strategy="greedy"):
+    # one leaf of 6 stacked matrices: capacity padding at 4 owners, and
+    # (round_robin + layout='assignment') a non-contiguous pack_index
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 8, 24))}
+    plan = api.dedicate_params(params, num_owners=num_owners,
+                               strategy=strategy,
+                               physical_layout=physical_layout)
+    return params, plan
+
+
+def test_reshard_roundtrip_4_2_4_exact():
+    """D=4 -> D'=2 -> D=4 must reproduce the original momentum exactly."""
+    params, plan4 = _stack_plan(4)
+    _, plan2 = _stack_plan(2)
+    opt4 = api.Muon(plan4, config=MuonConfig())
+    st = opt4.init(params)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(3), x.shape) * 0.1,
+        params)
+    _, st = opt4.update(grads, st, params)
+
+    st2 = reshard_owner_state(st, plan4, plan2)
+    back = reshard_owner_state(st2, plan2, plan4)
+    for skey, buf in st.momentum.items():
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.asarray(back.momentum[skey]))
+        # and the logical rows agree across ALL plans
+        np.testing.assert_array_equal(
+            _logical_rows(plan4, "w", buf),
+            _logical_rows(plan2, "w", st2.momentum[skey]))
+
+
+def test_reshard_roundtrip_noncontiguous_pack_index():
+    """physical_layout='assignment' scatters matrices into owner segments;
+    the reshard must follow pack_index, not assume contiguity."""
+    params, plan4 = _stack_plan(4, physical_layout="assignment",
+                                strategy="round_robin")
+    _, plan2 = _stack_plan(2, physical_layout="assignment",
+                           strategy="round_robin")
+    g4 = plan4.groups["w"]
+    assert not np.array_equal(g4.pack_index[:g4.count],
+                              np.arange(g4.count)), \
+        "test needs a non-contiguous pack layout"
+
+    opt4 = api.Muon(plan4, config=MuonConfig())
+    st = opt4.init(params)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(4), x.shape) * 0.1,
+        params)
+    _, st = opt4.update(grads, st, params)
+
+    st2 = reshard_owner_state(st, plan4, plan2)
+    back = reshard_owner_state(st2, plan2, plan4)
+    for skey, buf in st.momentum.items():
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.asarray(back.momentum[skey]))
+        np.testing.assert_array_equal(
+            _logical_rows(plan4, "w", buf),
+            _logical_rows(plan2, "w", st2.momentum[skey]))
+
+
+def test_reshard_carries_variant_state():
+    """NorMuon moments / MuonBP polar caches are owner-major buffers too and
+    must reshard row-exactly with the momentum."""
+    for variant in ("normuon", "muonbp"):
+        params, plan4 = _stack_plan(4)
+        _, plan2 = _stack_plan(2)
+        opt4 = api.Muon(plan4, config=MuonConfig(variant=variant))
+        st = opt4.init(params)
+        grads = jax.tree.map(
+            lambda x: jax.random.normal(jax.random.PRNGKey(5), x.shape) * 0.1,
+            params)
+        _, st = opt4.update(grads, st, params)
+        assert st.variant_state is not None
+
+        st2 = reshard_owner_state(st, plan4, plan2)
+        back = reshard_owner_state(st2, plan2, plan4)
+        # structure must match a fresh init at the new plan (stateless
+        # 'inner' fields stay None, not {}), or sharding templates built
+        # from init_state would mismatch the resharded tree
+        opt2 = api.Muon(plan2, config=MuonConfig(variant=variant))
+        assert jax.tree_util.tree_structure(st2.variant_state) == \
+            jax.tree_util.tree_structure(opt2.init(params).variant_state)
+        for field, bufs in st.variant_state.items():
+            for skey, buf in (bufs or {}).items():
+                # logical rows are exactly preserved across D=4 -> 2 -> 4;
+                # pad rows are reset to zero (they are never consumed —
+                # e.g. MuonBP's NS of a zero pad matrix caches a nonzero
+                # (∏a)·I polar map, which the repack rightfully drops)
+                np.testing.assert_array_equal(
+                    _logical_rows(plan4, "w", buf),
+                    _logical_rows(plan2, "w",
+                                  st2.variant_state[field][skey]))
+                np.testing.assert_array_equal(
+                    _logical_rows(plan4, "w", buf),
+                    _logical_rows(plan4, "w",
+                                  back.variant_state[field][skey]))
+                g4 = plan4.groups["w"]
+                pads = np.delete(np.asarray(back.variant_state[field][skey]),
+                                 g4.unpack_index, axis=0)
+                assert np.all(pads == 0)

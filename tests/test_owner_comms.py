@@ -1,0 +1,88 @@
+"""The layout layer in isolation: OwnerLayout pack/unpack round-trips,
+owner-buffer allocation, and cross-plan row repacking — no optimizer
+involved (the point of the layout/orthogonalizer/update-rule split)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core.owner_comms import (OwnerLayout, group_key_str, pack_group,
+                                    repack_rows, unpack_group)
+
+
+def _params(n_mats=6, shape=(16, 48), seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n_mats)
+    return {f"layer{i}": {"w": jax.random.normal(ks[i], shape)}
+            for i in range(n_mats)}
+
+
+def test_layout_pack_unpack_roundtrip():
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    layout = OwnerLayout(plan)
+    for key in layout.group_keys:
+        g = plan.groups[key]
+        leaves = {p: params[p.split("/")[0]]["w"] for p in g.leaf_paths}
+        packed = layout.pack(key, leaves)
+        assert packed.shape == layout.packed_shape(key)
+        out = layout.unpack(key, packed)
+        for p, v in out.items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(leaves[p]))
+
+
+def test_layout_matches_module_functions():
+    """OwnerLayout is a binding of the primitive functions, not a fork."""
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    layout = OwnerLayout(plan)
+    key = layout.group_keys[0]
+    leaves = {p: params[p.split("/")[0]]["w"]
+              for p in plan.groups[key].leaf_paths}
+    np.testing.assert_array_equal(
+        np.asarray(layout.pack(key, leaves)),
+        np.asarray(pack_group(plan, key, leaves)))
+    packed = pack_group(plan, key, leaves)
+    a = layout.unpack(key, packed)
+    b = unpack_group(plan, key, packed)
+    for p in a:
+        np.testing.assert_array_equal(np.asarray(a[p]), np.asarray(b[p]))
+
+
+def test_zeros_buffers_and_trailing_override():
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    layout = OwnerLayout(plan)
+    key = layout.group_keys[0]
+    g = plan.groups[key]
+    mom = layout.zeros(key, jnp.float32)
+    assert mom.shape == (g.packed_size,) + g.key
+    v = layout.zeros(key, jnp.float32, trailing=(g.key[0],))
+    assert v.shape == (g.packed_size, g.key[0])
+    q = layout.zeros(key, jnp.float32, trailing=(g.key[0], g.key[0]))
+    assert q.shape == (g.packed_size, g.key[0], g.key[0])
+
+
+def test_repack_rows_preserves_logical_rows():
+    """Unpack-under-old + repack-under-new keeps every logical row, for any
+    buffer rank (momentum stacks and variant state alike)."""
+    # one leaf with 6 stacked matrices -> a group with count 6
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 8, 24))}
+    plan4 = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    plan2 = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    g4, g2 = plan4.groups["w"], plan2.groups["w"]
+    buf4 = pack_group(plan4, "w", {"w": params["w"]})
+    assert buf4.shape[0] == g4.packed_size
+    buf2 = repack_rows(g4, g2, buf4)
+    back = repack_rows(g2, g4, buf2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(buf4))
+    # logical rows survive in order under the new plan
+    got = np.take(np.asarray(buf2), g2.unpack_index, axis=0)
+    want = np.take(np.asarray(buf4), g4.unpack_index, axis=0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_group_key_str_sanitizes():
+    assert "/" not in group_key_str("blocks/0/wq")
+    assert group_key_str((16, 64)) == "16x64"

@@ -1,0 +1,202 @@
+"""The pluggable variant registry: NorMuon, MuonBP, AdamW — all sharing the
+owner-layout pipeline, differing only in the orthogonalizer backend and its
+per-group state (threaded through MuonState.variant_state)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.gram_ns import GramNSConfig
+from repro.core.muon import MuonConfig
+
+
+def _tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return {
+        "blocks": {
+            "wq": jax.random.normal(ks[0], (3, 32, 32)) * 0.02,
+            "up": jax.random.normal(ks[2], (3, 32, 128)) * 0.02,
+            "down": jax.random.normal(ks[3], (3, 128, 32)) * 0.02,
+            "norm_scale": jnp.ones((3, 32)),
+        },
+        "embed_table": jax.random.normal(ks[4], (100, 32)) * 0.02,
+    }
+
+
+def _grads(seed=1):
+    return jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + x.size % 97),
+                                    x.shape) * 0.1, _tree())
+
+
+def _mk(variant, **kw):
+    params = _tree()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    kw.setdefault("ns", GramNSConfig(num_steps=5))
+    cfg = MuonConfig(variant=variant, learning_rate=0.1, momentum=0.9, **kw)
+    return params, plan, api.Muon(plan, config=cfg)
+
+
+def _run(opt, params, n=3):
+    state = opt.init(params)
+    for t in range(n):
+        u, state = opt.update(_grads(seed=t), state, params)
+        params = jax.tree.map(lambda p, d: p + d, params, u)
+    return params, state
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_contents_and_errors():
+    assert set(api.VARIANTS) >= {"muon", "normuon", "muonbp", "adamw"}
+    with pytest.raises(ValueError, match="unknown variant"):
+        api.get_variant("dion2")
+    with pytest.raises(ValueError, match="already registered"):
+        api.register_variant(api.VARIANTS["muon"])
+    params, plan, _ = _mk("muon")
+    with pytest.raises(ValueError, match="unknown variant"):
+        api.Muon(plan, config=MuonConfig(variant="nope"))
+
+
+def test_gather_mode_rejects_variant_backends():
+    params, plan, _ = _mk("muon")
+    opt = api.Muon(plan, config=MuonConfig(variant="normuon", mode="gather"))
+    with pytest.raises(ValueError, match="owner pipeline"):
+        opt.init(params)
+
+
+def test_adamw_variant_equals_adamw_mode():
+    params, _, opt_v = _mk("adamw")
+    _, _, opt_m = _mk("muon", mode="adamw")
+    uv, _ = opt_v.update(_grads(), opt_v.init(params), params)
+    um, _ = opt_m.update(_grads(), opt_m.init(params), params)
+    for a, b in zip(jax.tree.leaves(uv), jax.tree.leaves(um)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------- muonbp
+
+def test_muonbp_period_one_matches_muon_exactly():
+    """Every step refreshes -> bit-identical to the plain Gram path."""
+    params_m, _, opt_m = _mk("muon")
+    params_b, _, opt_b = _mk("muonbp", muonbp_period=1)
+    sm, sb = opt_m.init(params_m), opt_b.init(params_b)
+    for t in range(3):
+        g = _grads(seed=t)
+        um, sm = opt_m.update(g, sm, params_m)
+        ub, sb = opt_b.update(g, sb, params_b)
+        for a, b in zip(jax.tree.leaves(um), jax.tree.leaves(ub)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        params_m = jax.tree.map(lambda p, u: p + u, params_m, um)
+        params_b = jax.tree.map(lambda p, u: p + u, params_b, ub)
+
+
+def test_muonbp_caches_and_reuses_polar_map():
+    params, plan, opt = _mk("muonbp", muonbp_period=3)
+    state = opt.init(params)
+    g = _grads()
+    # step 0: refresh — Q cache becomes nonzero
+    _, s1 = opt.update(g, state, params)
+    q1 = {k: np.asarray(v) for k, v in s1.variant_state["q"].items()}
+    assert all(np.abs(q).max() > 0 for q in q1.values())
+    # steps 1, 2: reuse — the cache must be carried through unchanged
+    _, s2 = opt.update(g, s1, params)
+    _, s3 = opt.update(g, s2, params)
+    for k in q1:
+        np.testing.assert_array_equal(q1[k],
+                                      np.asarray(s3.variant_state["q"][k]))
+    # step 3: refresh again — momentum changed, so the cache must move
+    _, s4 = opt.update(g, s3, params)
+    assert any(
+        np.abs(q1[k] - np.asarray(s4.variant_state["q"][k])).max() > 1e-7
+        for k in q1)
+
+
+def test_muonbp_reuse_step_is_finite_and_reasonable():
+    """In-between steps apply a stale polar map — still a descent-scaled,
+    finite update of the same magnitude class as the exact one."""
+    params, _, opt = _mk("muonbp", muonbp_period=2)
+    params_m, _, opt_m = _mk("muon")
+    sb, sm = opt.init(params), opt_m.init(params_m)
+    g = _grads()
+    _, sb = opt.update(g, sb, params)            # refresh
+    ub, _ = opt.update(g, sb, params)            # reuse (stale Q)
+    _, sm = opt_m.update(g, sm, params_m)
+    um, _ = opt_m.update(g, sm, params_m)        # exact
+    for a, b in zip(jax.tree.leaves(ub), jax.tree.leaves(um)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert np.isfinite(a).all()
+        assert np.linalg.norm(a) < 10 * np.linalg.norm(b) + 1e-6
+
+
+# ------------------------------------------------------------------ normuon
+
+def test_normuon_state_shapes_and_finiteness():
+    params, plan, opt = _mk("normuon")
+    new_params, state = _run(opt, params)
+    v = state.variant_state["v"]
+    for key, grp in plan.groups.items():
+        skey = key.replace("/", ".")
+        assert v[skey].shape == (grp.packed_size, grp.key[0])
+        assert np.isfinite(np.asarray(v[skey])).all()
+        # pad rows never receive updates
+        if grp.packed_size > grp.count:
+            assert np.all(np.asarray(v[skey])[grp.count:] == 0)
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_normuon_differs_from_muon_but_preserves_update_norm():
+    params_n, _, opt_n = _mk("normuon")
+    params_m, _, opt_m = _mk("muon")
+    g = _grads()
+    un, _ = opt_n.update(g, opt_n.init(params_n), params_n)
+    um, _ = opt_m.update(g, opt_m.init(params_m), params_m)
+    wq_n = np.asarray(un["blocks"]["wq"], np.float32)
+    wq_m = np.asarray(um["blocks"]["wq"], np.float32)
+    assert np.abs(wq_n - wq_m).max() > 1e-6       # it does something
+    np.testing.assert_allclose(                   # but keeps the magnitude
+        np.linalg.norm(wq_n), np.linalg.norm(wq_m), rtol=0.05)
+
+
+def test_variants_compose_with_bucket_fusion():
+    params, _, opt = _mk("normuon", ns=GramNSConfig(num_steps=5,
+                                                    bucket_fusion=True))
+    new_params, state = _run(opt, params, n=2)
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ------------------------------------------------------- state round-trips
+
+@pytest.mark.parametrize("variant", ["normuon", "muonbp"])
+def test_state_dict_roundtrip_with_variant_state(variant):
+    params, _, opt = _mk(variant)
+    _, state = _run(opt, params, n=2)
+    d = opt.state_dict(state)
+    assert d["variant_state"] is not None
+    state2 = opt.load_state_dict(d)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("variant", ["normuon", "muonbp"])
+def test_checkpoint_roundtrip_variant_state(tmp_path, variant):
+    """The new per-variant state fields survive the checkpoint manager."""
+    from repro.checkpoint.manager import CheckpointManager
+    params, _, opt = _mk(variant)
+    _, state = _run(opt, params, n=2)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(2, state, block=True)
+    restored = mgr.restore(2)
+    assert jax.tree_util.tree_structure(restored) == \
+        jax.tree_util.tree_structure(state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and training continues from the restored state bit-identically
+    u1, _ = opt.update(_grads(seed=9), state, params)
+    u2, _ = opt.update(_grads(seed=9), restored, params)
+    for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
