@@ -5,6 +5,11 @@ speedup, by disabling each component in isolation:
                           (FLOP-exact model + measured Gram-vs-standard time)
   owner + load balance  — one owner per matrix (makespan) vs replicated NS
   batching + autotune   — batched stacks vs per-matrix launches (measured)
+
+plus (``--pipeline``) a stage-level breakdown of the bucketed optimizer
+schedule (docs/DESIGN.md §6): stage_in (pack + owner all-to-all), compute
+(momentum + NS on the local slice), publish (reshard back + scale/wd/lr) —
+the three phases the pipeline overlaps, timed in isolation.
 """
 
 from __future__ import annotations
@@ -12,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, time_fn
+from benchmarks.common import record, record_to_csv, time_samples
 from repro.core import load_balance
 from repro.core.gram_ns import GramNSConfig, gram_newton_schulz, gram_ns_flops
 from repro.core.newton_schulz import newton_schulz
@@ -21,7 +26,7 @@ CENSUS = {(256, 1024): 32, (256, 256): 64, (128, 512): 96}
 RANKS = 16
 
 
-def _variant_rows(variant: str) -> list[str]:
+def _variant_records(variant: str) -> list[dict]:
     """Orthogonalizer-phase cost of a registered variant on one owner stack:
     the refresh step (full NS) vs the steady-state step (MuonBP's cached
     reuse; identical to refresh for stateless variants).  Quantifies the
@@ -44,65 +49,110 @@ def _variant_rows(variant: str) -> list[str]:
 
     fn = jax.jit(lambda sts, step, st: ortho(
         sts, step=step, state=st, layout=layout, cfg=mcfg))
-    rows = []
-    t_refresh = time_fn(fn, stacks, jnp.zeros((), jnp.int32), state)
-    rows.append(csv_row(f"table2/variant/{variant}/ortho_refresh",
-                        t_refresh * 1e6))
+    recs = []
+    t_refresh = time_samples(fn, stacks, jnp.zeros((), jnp.int32), state)
+    recs.append(record("table2/variant/ortho_refresh", variant=variant,
+                       samples_s=t_refresh))
     # steady state: advance past the refresh boundary (step % period != 0)
     _, state1 = fn(stacks, jnp.zeros((), jnp.int32), state)
-    t_steady = time_fn(fn, stacks, jnp.ones((), jnp.int32), state1)
-    rows.append(csv_row(f"table2/variant/{variant}/ortho_steady",
-                        t_steady * 1e6,
-                        derived=f"refresh/steady={t_refresh/t_steady:.2f}x"))
-    return rows
+    t_steady = time_samples(fn, stacks, jnp.ones((), jnp.int32), state1)
+    recs.append(record(
+        "table2/variant/ortho_steady", variant=variant, samples_s=t_steady,
+        derived=f"refresh/steady="
+                f"{min(t_refresh)/min(t_steady):.2f}x"))
+    return recs
 
 
-def run(variant: str = "muon") -> list[str]:
-    rows = []
+def _pipeline_records(variant: str, pipeline: str) -> list[dict]:
+    """Stage-level cost of the bucketed schedule on a multi-bucket toy
+    census: stage_in vs compute vs publish vs the whole pipelined step."""
+    import numpy as np
+
+    from repro.core import api
+    from repro.core.muon import MuonConfig
+    from repro.core.pipeline import BucketPipeline
+
+    params = {f"w{i}": np.zeros((8, m, n), np.float32)
+              for i, (m, n) in enumerate(sorted(CENSUS))}
+    rng = jax.random.PRNGKey(3)
+    grads = {p: jax.random.normal(jax.random.fold_in(rng, i),
+                                  v.shape) * 0.02
+             for i, (p, v) in enumerate(params.items())}
+    plan = api.dedicate_params(params, num_owners=1, strategy="greedy")
+    cfg = MuonConfig(variant=variant, pipeline=pipeline)
+    spec = api.get_variant(cfg.variant)
+    if spec.elementwise:
+        return []
+    pipe = BucketPipeline(plan, cfg, spec=spec)
+    opt = api.Muon(plan, config=cfg)
+    state = opt.init(params)
+    recs = []
+
+    stage = jax.jit(lambda g: pipe.stage_in_all(g))
+    recs.append(record("table2/pipeline/stage_in", variant=variant,
+                       pipeline=pipeline, samples_s=time_samples(stage,
+                                                                 grads)))
+    staged = stage(grads)
+    comp = jax.jit(lambda st, s: pipe.run_staged(st, params, s)[:2])
+    recs.append(record("table2/pipeline/compute_publish", variant=variant,
+                       pipeline=pipeline,
+                       samples_s=time_samples(comp, staged, state)))
+    full = jax.jit(lambda g, s: opt.update(g, s, params))
+    recs.append(record("table2/pipeline/full_step", variant=variant,
+                       pipeline=pipeline,
+                       samples_s=time_samples(full, grads, state)))
+    return recs
+
+
+def run_records(variant: str = "muon",
+                pipeline: str = "bucketed") -> list[dict]:
+    recs: list[dict] = []
     cfg = GramNSConfig(num_steps=5)
 
     # ---- symmetric-kernel share (FLOP-exact; kernels halve every product)
-    full = sym = std = 0.0
+    full = sym = 0.0
     for (m, n), c in CENSUS.items():
         f = gram_ns_flops(m, n, 5, batch=c)
         full += f["gram_full_gemm"]
         sym += f["gram_symmetric_kernel"]
-        std += f["standard_ns"]
-    rows.append(csv_row("table2/symmetric_kernel_flop_saving_pct",
-                        (1 - sym / full) * 1e6, derived="pct_x1e4"))
+    recs.append(record("table2/symmetric_kernel_flop_saving_pct",
+                       value=(1 - sym / full) * 100, unit="pct",
+                       derived="pct"))
 
     # ---- owner + LB: replicated cost vs balanced makespan
     cm = load_balance.analytic_cost_model(CENSUS)
     asn = load_balance.solve_greedy(CENSUS, cm, RANKS)
     replicated = sum(cm.per_matrix(s) * n for s, n in CENSUS.items())
-    rows.append(csv_row("table2/owner_lb_speedup",
-                        replicated / asn.makespan(cm) * 100,
-                        derived="ratio_x100"))
+    recs.append(record("table2/owner_lb_speedup",
+                       value=replicated / asn.makespan(cm) * 100,
+                       unit="ratio_x100", derived="ratio_x100"))
     r0 = load_balance.rank0(CENSUS, RANKS)
-    rows.append(csv_row("table2/rank0_ablation_slowdown",
-                        r0.makespan(cm) / asn.makespan(cm) * 100,
-                        derived="ratio_x100"))
+    recs.append(record("table2/rank0_ablation_slowdown",
+                       value=r0.makespan(cm) / asn.makespan(cm) * 100,
+                       unit="ratio_x100", derived="ratio_x100"))
 
     # ---- batching: measured batched stack vs per-matrix loop
     m, n, b = 128, 512, 16
     x = jax.random.normal(jax.random.PRNGKey(0), (b, m, n))
-    fn_b = jax.jit(lambda v: gram_newton_schulz(v, cfg, assume_short_fat=True))
-    t_batched = time_fn(fn_b, x)
-    fn_1 = jax.jit(lambda v: gram_newton_schulz(v, cfg, assume_short_fat=True))
-    x1 = x[:1]
-    t_single = time_fn(fn_1, x1)
-    rows.append(csv_row("table2/batching_speedup",
-                        (t_single * b) / t_batched * 100,
-                        derived="ratio_x100"))
+    fn_b = jax.jit(lambda v: gram_newton_schulz(v, cfg,
+                                                assume_short_fat=True))
+    t_batched = min(time_samples(fn_b, x))
+    fn_1 = jax.jit(lambda v: gram_newton_schulz(v, cfg,
+                                                assume_short_fat=True))
+    t_single = min(time_samples(fn_1, x[:1]))
+    recs.append(record("table2/batching_speedup",
+                       value=(t_single * b) / t_batched * 100,
+                       unit="ratio_x100", derived="ratio_x100"))
 
     # ---- gram vs standard NS (measured, fat matrices where gram wins)
     xf = jax.random.normal(jax.random.PRNGKey(1), (8, 256, 2048))
-    t_gram = time_fn(jax.jit(
-        lambda v: gram_newton_schulz(v, cfg, assume_short_fat=True)), xf)
-    t_std = time_fn(jax.jit(
-        lambda v: newton_schulz(v, num_steps=5)), xf)
-    rows.append(csv_row("table2/gram_vs_standard_ns_speedup",
-                        t_std / t_gram * 100, derived="ratio_x100"))
+    t_gram = min(time_samples(jax.jit(
+        lambda v: gram_newton_schulz(v, cfg, assume_short_fat=True)), xf))
+    t_std = min(time_samples(jax.jit(
+        lambda v: newton_schulz(v, num_steps=5)), xf))
+    recs.append(record("table2/gram_vs_standard_ns_speedup",
+                       value=t_std / t_gram * 100, unit="ratio_x100",
+                       derived="ratio_x100"))
 
     # ---- composed share attribution (normalized like Table 2)
     s_kernel = 1 - sym / full
@@ -112,12 +162,17 @@ def run(variant: str = "muon") -> list[str]:
     for name, s in (("symmetric_kernel", s_kernel),
                     ("owner_scheduling_lb", s_owner),
                     ("autotune_batching", s_batch)):
-        rows.append(csv_row(f"table2/share/{name}", s / tot * 1e6,
-                            derived="share_x1e4"))
+        recs.append(record(f"table2/share/{name}", value=s / tot * 100,
+                           unit="pct", derived="share_pct"))
 
-    # ---- pluggable-variant orthogonalizer overhead
-    rows.extend(_variant_rows(variant))
-    return rows
+    # ---- pluggable-variant orthogonalizer overhead + pipeline stages
+    recs.extend(_variant_records(variant))
+    recs.extend(_pipeline_records(variant, pipeline))
+    return recs
+
+
+def run(variant: str = "muon", pipeline: str = "bucketed") -> list[str]:
+    return [record_to_csv(r) for r in run_records(variant, pipeline)]
 
 
 if __name__ == "__main__":
@@ -125,5 +180,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", default="muonbp",
                     help="variant for the orthogonalizer-overhead rows")
-    for r in run(variant=ap.parse_args().variant):
+    ap.add_argument("--pipeline", default="bucketed",
+                    choices=["fused", "bucketed"],
+                    help="schedule for the pipeline-stage rows")
+    args = ap.parse_args()
+    for r in run(variant=args.variant, pipeline=args.pipeline):
         print(r)

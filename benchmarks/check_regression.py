@@ -1,0 +1,142 @@
+"""Validate BENCH_*.json files and diff them against committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_step_time.json --current /tmp/BENCH_step_time.json
+
+Two jobs (both exercised by the CI benchmark-smoke job):
+
+  schema   — every file must carry ``schema_version == BENCH_SCHEMA_VERSION``
+             and records with the full field set (name/config/variant/mode/
+             pipeline/median_us/p90_us/samples/unit/derived);
+  regress  — measured records (``samples > 0``) shared between baseline and
+             current are compared on ``median_us``; anything more than
+             ``--threshold`` (default 10%) slower is flagged.  Derived and
+             analytic rows (samples == 0) are schema-checked only — they are
+             deterministic model outputs, not wall clock, and CI runners are
+             noisy enough that absolute wall-clock diffs are advisory:
+             ``--advisory`` downgrades regressions to warnings (the CI smoke
+             job uses it; a quiet dev box can enforce).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+from benchmarks.common import BENCH_SCHEMA_VERSION
+
+REQUIRED_FIELDS = ("name", "config", "variant", "mode", "pipeline",
+                   "median_us", "p90_us", "samples", "unit", "derived")
+
+
+def load_and_validate(path: str) -> dict:
+    """Parse one BENCH_*.json and enforce the schema; raises ValueError."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema_version={doc.get('schema_version')!r}, "
+            f"expected {BENCH_SCHEMA_VERSION}")
+    for top in ("suite", "host", "records"):
+        if top not in doc:
+            raise ValueError(f"{path}: missing top-level field {top!r}")
+    if not isinstance(doc["records"], list) or not doc["records"]:
+        raise ValueError(f"{path}: records must be a non-empty list")
+    for i, rec in enumerate(doc["records"]):
+        missing = [k for k in REQUIRED_FIELDS if k not in rec]
+        if missing:
+            raise ValueError(
+                f"{path}: records[{i}] ({rec.get('name', '?')}) missing "
+                f"fields {missing}")
+        if rec["samples"] < 0 or (rec["samples"] > 0 and
+                                  (rec["median_us"] < 0
+                                   or rec["p90_us"] < 0)):
+            # derived rows (samples == 0) may carry signed model values
+            raise ValueError(
+                f"{path}: records[{i}] ({rec['name']}) has negative values")
+    return doc
+
+
+def _key(rec: dict) -> Tuple[str, str, str, str, str]:
+    return (rec["name"], rec["config"], rec["variant"], rec["mode"],
+            rec["pipeline"])
+
+
+def diff(baseline: dict, current: dict,
+         threshold_pct: float) -> Tuple[List[str], List[str]]:
+    """Compare measured rows; returns (regressions, notes)."""
+    base: Dict[Tuple, dict] = {_key(r): r for r in baseline["records"]}
+    regressions, notes = [], []
+    for rec in current["records"]:
+        ref = base.get(_key(rec))
+        tag = "/".join(t for t in _key(rec) if t)
+        if ref is None:
+            notes.append(f"new record (no baseline): {tag}")
+            continue
+        if rec["samples"] == 0 or ref["samples"] == 0:
+            continue  # derived/analytic rows: schema-checked only
+        if ref["median_us"] <= 0:
+            continue
+        delta = (rec["median_us"] - ref["median_us"]) / ref["median_us"] * 100
+        line = (f"{tag}: {ref['median_us']:.1f}us -> "
+                f"{rec['median_us']:.1f}us ({delta:+.1f}%)")
+        if delta > threshold_pct:
+            regressions.append(line)
+        elif abs(delta) > threshold_pct:
+            notes.append(f"improvement: {line}")
+    missing = set(base) - {_key(r) for r in current["records"]}
+    for k in sorted(missing):
+        notes.append("baseline record missing from current: "
+                     + "/".join(t for t in k if t))
+    return regressions, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", action="append", default=[],
+                    help="committed BENCH_*.json (repeatable, pairs with "
+                         "--current in order)")
+    ap.add_argument("--current", action="append", default=[],
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="flag measured rows slower than this pct (default "
+                         "10)")
+    ap.add_argument("--advisory", action="store_true",
+                    help="report regressions but exit 0 (noisy CI runners)")
+    args = ap.parse_args()
+    if len(args.baseline) != len(args.current):
+        raise SystemExit("--baseline/--current counts differ")
+    if not args.current:
+        raise SystemExit("nothing to check (pass --baseline/--current)")
+
+    failed = False
+    for bpath, cpath in zip(args.baseline, args.current):
+        try:
+            base = load_and_validate(bpath)
+            cur = load_and_validate(cpath)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"SCHEMA FAIL: {e}")
+            failed = True
+            continue
+        if base["suite"] != cur["suite"]:
+            print(f"SCHEMA FAIL: suite mismatch {base['suite']} vs "
+                  f"{cur['suite']}")
+            failed = True
+            continue
+        regressions, notes = diff(base, cur, args.threshold)
+        print(f"[{cur['suite']}] {len(cur['records'])} records, "
+              f"{len(regressions)} regression(s) over "
+              f"{args.threshold:.0f}%")
+        for n in notes:
+            print(f"  note: {n}")
+        for r in regressions:
+            print(f"  REGRESSION: {r}")
+        if regressions and not args.advisory:
+            failed = True
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,30 +3,105 @@
 Benchmarks run on the single CPU device (never set the 512-device flag
 here).  Wall-clock numbers are for THIS host (XLA:CPU); mesh-scale numbers
 are *derived* via the measured-cost model + the roofline artifacts, and are
-labelled as such in the CSV (`derived` column).
+labelled as such in the CSV (`derived` column) and in the JSON records
+(`derived` field).
+
+JSON trajectory: suites emit structured records (``record(...)``) which
+``benchmarks/run.py`` writes as versioned ``BENCH_<suite>.json`` files —
+the committed baselines CI diffs against (benchmarks/check_regression.py).
 """
 
 from __future__ import annotations
 
+import json
+import platform
 import time
-from typing import Callable
+from typing import Callable, List, Optional
 
 import jax
 
+BENCH_SCHEMA_VERSION = 1
 
-def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
-    """Best-of-N wall time in seconds (compiled path)."""
+
+def time_samples(fn: Callable, *args, repeats: int = 5,
+                 warmup: int = 2) -> List[float]:
+    """Wall-time samples in seconds (compiled path), after warmup."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
-    best = float("inf")
+    samples = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+        samples.append(time.perf_counter() - t0)
+    return samples
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-N wall time in seconds (compiled path)."""
+    return min(time_samples(fn, *args, repeats=repeats, warmup=warmup))
+
+
+def median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def p90(xs: List[float]) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(0.9 * (len(s) - 1))))]
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def record(name: str, *, config: str = "", variant: str = "",
+           mode: str = "", pipeline: str = "",
+           samples_s: Optional[List[float]] = None,
+           value: Optional[float] = None, unit: str = "us",
+           derived: str = "") -> dict:
+    """One structured benchmark record (the BENCH_*.json schema).
+
+    Wall-clock rows pass ``samples_s`` (seconds) and get median/p90 in µs;
+    derived/analytic rows pass ``value`` directly with a ``derived`` tag.
+    """
+    rec = {"name": name, "config": config, "variant": variant,
+           "mode": mode, "pipeline": pipeline, "unit": unit,
+           "derived": derived}
+    if samples_s is not None:
+        rec["median_us"] = median(samples_s) * 1e6
+        rec["p90_us"] = p90(samples_s) * 1e6
+        rec["samples"] = len(samples_s)
+    else:
+        rec["median_us"] = float(value)
+        rec["p90_us"] = float(value)
+        rec["samples"] = 0
+    return rec
+
+
+def record_to_csv(rec: dict) -> str:
+    tags = "/".join(t for t in (rec["mode"], rec["variant"], rec["pipeline"])
+                    if t)
+    name = f"{rec['name']}[{tags}]" if tags else rec["name"]
+    return csv_row(name, rec["median_us"], rec["derived"])
+
+
+def write_bench_json(path: str, suite: str, records: List[dict]) -> None:
+    """Write one versioned BENCH_*.json file (schema below; validated by
+    benchmarks/check_regression.py)."""
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "suite": suite,
+        "host": {"platform": platform.machine(),
+                 "python": platform.python_version(),
+                 "jax": jax.__version__,
+                 "backend": jax.default_backend()},
+        "records": records,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")

@@ -2,14 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run step_time  # one bench
+    PYTHONPATH=src python -m benchmarks.run --json .   # also write BENCH_*.json
 
 Prints ``name,us_per_call,derived`` CSV.  Wall-clock rows are measured on
 this host (XLA:CPU, 1 device); mesh-scale rows are derived from the measured
 cost model / dry-run artifacts and say so in ``derived``.
+
+Suites that expose ``run_records()`` additionally emit versioned
+``BENCH_<suite>.json`` files under ``--json DIR`` (schema in
+benchmarks/common.py; validated + regression-diffed by
+benchmarks/check_regression.py, which CI runs against the committed
+baselines).
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
@@ -17,20 +26,53 @@ import traceback
 def main() -> None:
     from benchmarks import (batching, breakdown, load_balance_bench,
                             roofline_table, step_time)
+    from benchmarks.common import record_to_csv, write_bench_json
     suites = {
-        "step_time": step_time.run,          # Table 1 / Fig 8
-        "breakdown": breakdown.run,          # Table 2
-        "batching": batching.run,            # Fig 7
-        "load_balance": load_balance_bench.run,   # §3.4
-        "roofline": roofline_table.run,      # §Roofline (from dry-run)
+        "step_time": step_time,              # Table 1 / Fig 8
+        "breakdown": breakdown,              # Table 2
+        "batching": batching,                # Fig 7
+        "load_balance": load_balance_bench,  # §3.4
+        "roofline": roofline_table,          # §Roofline (from dry-run)
     }
-    want = sys.argv[1:] or list(suites)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suite", nargs="*",
+                    help=f"suites to run (default: all of {list(suites)})")
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="also write BENCH_<suite>.json files to DIR for "
+                         "suites with structured records")
+    ap.add_argument("--pipeline", default="both",
+                    choices=["fused", "bucketed", "both"],
+                    help="optimizer-step schedule(s) for step_time")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="wall-clock samples per case for step_time "
+                         "(default: the suite's baseline setting)")
+    args = ap.parse_args()
+
+    want = args.suite or list(suites)
+    unknown = [s for s in want if s not in suites]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; have {list(suites)}")
     print("name,us_per_call,derived")
     failed = []
     for name in want:
+        mod = suites[name]
         try:
-            for row in suites[name]():
-                print(row, flush=True)
+            if hasattr(mod, "run_records"):
+                kw = {}
+                if name == "step_time":
+                    kw["pipeline"] = args.pipeline
+                    if args.repeats is not None:
+                        kw["repeats"] = args.repeats
+                records = mod.run_records(**kw)
+                for rec in records:
+                    print(record_to_csv(rec), flush=True)
+                if args.json is not None:
+                    path = os.path.join(args.json, f"BENCH_{name}.json")
+                    write_bench_json(path, name, records)
+                    print(f"# wrote {path}", file=sys.stderr)
+            else:
+                for row in mod.run():
+                    print(row, flush=True)
         except Exception:  # noqa: BLE001 — report per-suite, keep going
             failed.append(name)
             traceback.print_exc()

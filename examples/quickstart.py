@@ -25,6 +25,9 @@ def main():
                     choices=sorted(api.VARIANTS),
                     help="optimizer variant (see the registry in core/api.py)")
     ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--pipeline", default="fused",
+                    choices=["fused", "bucketed"],
+                    help="optimizer-step schedule (docs/DESIGN.md §6)")
     args = ap.parse_args()
 
     cfg = configs.get("smollm-360m", reduced=True)
@@ -34,7 +37,8 @@ def main():
     # --- the paper's three lines -----------------------------------------
     plan = api.dedicate_params(shapes)                  # 1. dedicate
     opt = api.Muon(plan, config=MuonConfig(             # 2. construct
-        learning_rate=0.02, momentum=0.95, variant=args.variant))
+        learning_rate=0.02, momentum=0.95, variant=args.variant,
+        pipeline=args.pipeline))
     state = init_state(cfg, opt, jax.random.PRNGKey(0))  # 3. init / update
     # ----------------------------------------------------------------------
 

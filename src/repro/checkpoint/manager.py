@@ -1,5 +1,5 @@
 """Shard-aware checkpointing with atomic commit, rotation, async save and
-elastic restore (fault-tolerance substrate; DESIGN.md §7).
+elastic restore (fault-tolerance substrate; docs/DESIGN.md §7).
 
 Layout of one checkpoint:
 

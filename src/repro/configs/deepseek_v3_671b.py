@@ -1,7 +1,7 @@
 """deepseek-v3-671b [moe] — MLA + 1 shared + 256 routed top-8 (arXiv:2412.19437).
 
 61L d_model=7168 128H d_ff(expert)=2048 vocab=129280.
-Deviations (DESIGN.md §Deviations): all 61 layers MoE (paper: first 3 dense);
+Deviations from the paper: all 61 layers MoE (paper: first 3 dense);
 MTP auxiliary head omitted (training-objective feature, orthogonal to the
 optimizer-systems reproduction); sort-based token-choice dispatch (moe.py).
 Full attention ⇒ long_500k skipped.  ZeRO-3 + bf16 states at mesh scale.

@@ -2,7 +2,7 @@
 
 96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
 Full attention ⇒ long_500k skipped.  ZeRO-3 parameter sharding + bf16 states
-required at 256–512 chips (DESIGN.md §8).
+required at 256–512 chips (docs/DESIGN.md §8).
 """
 
 from repro.models.transformer import ArchConfig

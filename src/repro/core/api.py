@@ -119,12 +119,32 @@ class Muon:
         cfg = config or MuonConfig()
         if overrides:
             cfg = replace(cfg, **overrides)
-        get_variant(cfg.variant)   # fail fast on unknown variants
+        spec = get_variant(cfg.variant)   # fail fast on unknown variants
         self.config = cfg
+        if cfg.autotune_prewarm and not spec.elementwise:
+            # Paper §3.3 workflow: parameter shapes are fixed for the whole
+            # run, so tune (or analytically score) every kernel shape the
+            # dedication plan can launch once, at init, into the persistent
+            # cache — the hot path then always hits.
+            from repro.kernels.autotune import prewarm_plan
+            prewarm_plan(plan, dtypes=(cfg.ns.compute_dtype,))
 
     @property
     def variant(self) -> VariantSpec:
         return get_variant(self.config.variant)
+
+    @property
+    def effective_mode(self) -> str:
+        """Execution mode after variant resolution ('owner'/'gather'/'adamw');
+        elementwise variants force 'adamw' whatever ``config.mode`` says."""
+        from repro.core.muon import _resolve
+        return _resolve(self.config)[1]
+
+    def replace(self, **overrides) -> "Muon":
+        """A new Muon sharing this plan/mesh with config fields overridden
+        (e.g. ``opt.replace(pipeline='bucketed')``)."""
+        return Muon(self.plan, self.mesh,
+                    config=replace(self.config, **overrides))
 
     def init(self, params) -> MuonState:
         return muon_init(self.plan, params, self.config, self.mesh)
@@ -132,6 +152,13 @@ class Muon:
     def update(self, grads, state: MuonState, params):
         return muon_update(self.plan, grads, state, params, self.config,
                            self.mesh)
+
+    def update_staged(self, staged, rest_grads, state: MuonState, params):
+        """Optimizer step from pre-staged owner-layout matrix gradients (the
+        accumulation-overlapped bucketed pipeline; see core/pipeline.py)."""
+        from repro.core.muon import muon_update_staged
+        return muon_update_staged(self.plan, staged, rest_grads, state,
+                                  params, self.config, self.mesh)
 
     # state-dict accessors (paper §4: "the state-dict accessors")
     def state_dict(self, state: MuonState) -> dict:

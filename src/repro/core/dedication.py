@@ -15,7 +15,7 @@ walks the parameter pytree once at init and produces a ``DedicationPlan``:
 * **owner-major packed layout** — per group, an index permutation realizing
   the assignment as a capacity-padded stacked array ``(D·cap, m, n)`` whose
   leading axis is sharded over the owner mesh axes.  This is the SPMD
-  realization of per-rank ownership (DESIGN.md §2/§5): device r holds and
+  realization of per-rank ownership (docs/DESIGN.md §2/§5): device r holds and
   updates exactly the matrices assigned to owner slot r.
 * **Gram buckets** — groups with equal Gram dimension m are fused for the
   m×m iteration phase (the paper's shape-batched NS execution), maximizing

@@ -30,7 +30,7 @@ and one m×n product (final ``Q_k X₀``).
 The inner products dispatch either to pure-jnp reference ops or to the Pallas
 TPU kernels in ``repro.kernels`` (``use_kernels=True``; CPU tests exercise the
 kernels in interpret mode, the multi-pod dry-run uses the jnp path — see
-DESIGN.md §2 on roofline FLOP accounting).
+docs/DESIGN.md §2 on roofline FLOP accounting).
 """
 
 from __future__ import annotations
@@ -118,7 +118,7 @@ def gram_newton_schulz(
     # Frobenius norm with fp32 accumulation WITHOUT materializing an fp32
     # copy of x: the square+convert fuse into the reduction.  (An up-front
     # x.astype(f32) gets hoisted by XLA before the owner reshard, doubling
-    # the transpose volume of the whole model — see EXPERIMENTS.md §Perf.)
+    # the transpose volume of the whole model — see docs/DESIGN.md §9.)
     norm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)),
                             axis=(-2, -1), keepdims=True))
     cdtype = jnp.dtype(cfg.compute_dtype)

@@ -14,7 +14,7 @@ TPU adaptation: "columns" become positions along the fast mesh axis (the
 'model' ICI ring), "nodes" the slower axis ('data', and the DCN 'pod' axis in
 multi-pod meshes).  The layout orders owner slots in the stacked owner-sharded
 buffers so that adjacent layers' collective traffic lands on different ICI
-columns / pods (DESIGN.md §2).
+columns / pods (docs/DESIGN.md §2).
 
 The XOR rule requires R to be a power of two (and balance additionally needs
 R | C, as in the paper's 4×8); otherwise we fall back to an additive rotation

@@ -73,9 +73,21 @@ class MuonConfig:
     #   'muonbp'  — block-periodic NS refresh every `muonbp_period` steps
     #   'adamw'   — elementwise baseline (equivalent to mode='adamw')
     variant: str = "muon"
+    # optimizer-step schedule for mode='owner' (core/pipeline.py):
+    #   'fused'    — one post-backward phase: pack all → NS all → publish all
+    #   'bucketed' — per-Gram-bucket stage_in/compute/publish pipeline with
+    #                double-buffered staging (bit-exact with 'fused';
+    #                docs/DESIGN.md §6)
+    pipeline: str = "fused"
+    # keep the bucketed schedule's optimization_barrier ties (disable to let
+    # XLA schedule freely — changes overlap/memory, never values)
+    pipeline_barriers: bool = True
+    # pre-warm the kernel autotune cache for every shape in the dedication
+    # plan at optimizer construction (paper §3.3 workflow)
+    autotune_prewarm: bool = True
     momentum_dtype: str = "float32"
     # dtype of the packed owner-layout gradient/momentum math; bf16 for
-    # trillion-param configs (memory policy, DESIGN.md §8)
+    # trillion-param configs (memory policy, docs/DESIGN.md §8)
     pack_dtype: str = "float32"
     # AdamW settings for non-matrix params (and for mode='adamw')
     adam_lr: float = 3e-4
@@ -84,7 +96,7 @@ class MuonConfig:
     adam_eps: float = 1e-8
     adam_weight_decay: float = 0.0
     # gradient-transpose compression: reduce to owners in bf16 with fp32
-    # error-feedback accumulator (distributed-optimization trick; DESIGN §7)
+    # error-feedback accumulator (docs/DESIGN.md §7)
     compress_grads: bool = False
     # variant knobs
     normuon_beta2: float = 0.95          # NorMuon neuron second-moment decay
@@ -101,7 +113,30 @@ def _resolve(cfg: MuonConfig):
         raise ValueError(
             f"variant {spec.name!r} requires the owner pipeline "
             "(mode='owner'); the gather baseline only supports 'muon'")
+    if cfg.pipeline not in ("fused", "bucketed"):
+        raise ValueError(f"unknown pipeline {cfg.pipeline!r}; "
+                         "known: 'fused', 'bucketed'")
+    if cfg.pipeline == "bucketed" and mode == "gather":
+        raise ValueError(
+            "pipeline='bucketed' schedules the owner-layout stages; the "
+            "gather baseline has no staged comms to pipeline (mode='owner')")
     return spec, mode
+
+
+def compress_with_error_feedback(gm, error_feedback, cfg: MuonConfig):
+    """bf16 gradient transpose with fp32 error feedback (docs/DESIGN.md §7):
+    compressed = bf16(g + e); residual e' = (g + e) - compressed stays in the
+    training layout.  Identity when compression is off.  Returns
+    ``(grads_for_pack, new_error_feedback)``."""
+    if not (cfg.compress_grads and error_feedback is not None):
+        return gm, error_feedback
+    compressed, new_ef = {}, {}
+    for p, g in gm.items():
+        acc = g.astype(jnp.float32) + error_feedback[p]
+        cg = acc.astype(jnp.bfloat16)
+        new_ef[p] = acc - cg.astype(jnp.float32)
+        compressed[p] = cg
+    return compressed, new_ef
 
 
 # --------------------------------------------------------------------------
@@ -205,23 +240,23 @@ def muon_update(plan: DedicationPlan, grads, state: MuonState, params,
 def _owner_update(plan: DedicationPlan, gm, pm, state: MuonState,
                   cfg: MuonConfig, mesh, spec):
     """DMuon path: pack → momentum → orthogonalize (pluggable backend) →
-    unpack/publish.  Alg. 1 lines 10–15 in SPMD form."""
+    unpack/publish.  Alg. 1 lines 10–15 in SPMD form.
+
+    ``cfg.pipeline`` selects the schedule: 'fused' is the one-phase
+    post-backward program below; 'bucketed' delegates to the per-Gram-bucket
+    stage_in/compute/publish pipeline (core/pipeline.py) — same math, ordered
+    so the staged comms overlap the compute wavefront."""
+    if cfg.pipeline == "bucketed":
+        from repro.core.pipeline import BucketPipeline
+        pipe = BucketPipeline(plan, cfg, mesh, spec)
+        return pipe.run_from_grads(gm, pm, state)
+
     layout = OwnerLayout(plan, mesh)
     new_momentum: Dict[str, jax.Array] = {}
-    new_ef = state.error_feedback
 
     # --- gradient routing: training layout -> owner layout (reduce-to-owner)
-    grads_for_pack = gm
-    if cfg.compress_grads and state.error_feedback is not None:
-        # bf16 transpose with fp32 error feedback: compressed = bf16(g + e);
-        # residual e' = (g + e) - compressed stays in training layout.
-        compressed, new_ef = {}, {}
-        for p, g in gm.items():
-            acc = g.astype(jnp.float32) + state.error_feedback[p]
-            cg = acc.astype(jnp.bfloat16)
-            new_ef[p] = acc - cg.astype(jnp.float32)
-            compressed[p] = cg
-        grads_for_pack = compressed
+    grads_for_pack, new_ef = compress_with_error_feedback(
+        gm, state.error_feedback, cfg)
 
     pdt = jnp.dtype(cfg.pack_dtype)
     packed_mom: Dict[str, jax.Array] = {}
@@ -256,6 +291,45 @@ def _owner_update(plan: DedicationPlan, gm, pm, state: MuonState,
         for p, upd in per_leaf.items():
             matrix_updates[p] = apply_wd_and_lr(upd, pm[p], cfg)
     return matrix_updates, new_momentum, new_ef, new_vstate
+
+
+def muon_update_staged(plan: DedicationPlan, staged, rest_grads,
+                       state: MuonState, params, cfg: MuonConfig, mesh=None):
+    """One optimizer step from PRE-STAGED owner-layout matrix gradients.
+
+    ``staged`` is {group_key_str: (D·cap, m, n) owner-major gradient stack}
+    (already averaged over microbatches); ``rest_grads`` is the {path: grad}
+    dict of the non-matrix (AdamW) leaves.  This is the entry point of the
+    accumulation-overlapped bucketed pipeline: ``train/step.py`` packs each
+    microbatch's gradients to owners inside the ``lax.scan`` (stage_in under
+    the backward pass), then calls this to run compute + publish only.
+
+    Bit-exact with ``muon_update`` on the packed-then-averaged gradients:
+    packing is a permutation + zero-pad, so it commutes with the microbatch
+    sum, the 1/accum scaling, and the pack-dtype cast.
+
+    Incompatible with ``compress_grads`` (error feedback needs the summed
+    gradient in the training layout) — callers fall back to the unstaged
+    path; enforced here.
+    """
+    spec, mode = _resolve(cfg)
+    if mode != "owner":
+        raise ValueError(f"muon_update_staged requires mode='owner' "
+                         f"(got {mode!r})")
+    if cfg.compress_grads:
+        raise ValueError("pre-staged gradients are incompatible with "
+                         "compress_grads (error feedback is a training-layout "
+                         "residual)")
+    pm, pr, _ = _matrix_and_rest(plan, params)
+    adam_updates, adamw_state = adamw_update(rest_grads, state.adamw, pr,
+                                             state.step, cfg)
+    from repro.core.pipeline import BucketPipeline
+    pipe = BucketPipeline(plan, cfg, mesh, spec)
+    matrix_updates, new_momentum, new_vstate = pipe.run_staged(
+        staged, pm, state)
+    updates = _rebuild(params, matrix_updates, adam_updates)
+    return updates, MuonState(state.step + 1, new_momentum, adamw_state,
+                              state.error_feedback, new_vstate)
 
 
 def _gather_update(plan: DedicationPlan, gm, pm, state: MuonState,

@@ -12,7 +12,7 @@ SVD ``M = UΣVᵀ``:
     X_{i+1} = a X_i + (b A_i + c A_i²) X_i,   A_i = X_i X_iᵀ          (Eq. 2)
 
 All matmuls accumulate in fp32 (``preferred_element_type``) regardless of the
-working dtype; on TPU the working dtype is bf16 by default (see DESIGN.md §2
+working dtype; on TPU the working dtype is bf16 by default (see docs/DESIGN.md §2
 for the fp16→bf16 adaptation note).
 """
 

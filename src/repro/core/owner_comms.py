@@ -184,7 +184,7 @@ def _to_owner_staged(x, stacked_spec, plan, mesh):
     axis — a reshard GSPMD lowers as a true all-to-all.  Jumping directly to
     the owner spec lets XLA resolve the two-axis move "through replication"
     (full-tensor all-gathers), a TB-scale temp at 340B+ scale; see
-    EXPERIMENTS.md §Perf (nemotron train iteration).
+    docs/DESIGN.md §2 and §9 (nemotron train iteration).
     """
     if mesh is None:
         return x
@@ -322,15 +322,14 @@ class OwnerLayout:
 
     # ---------------------------------------------------------- local map
 
-    def shard_local(self, fn, tree_in, *, state_ndims: Dict[str, int] = None):
+    def shard_local(self, fn, tree_in):
         """Run ``fn`` over owner-sharded stacks with provably local compute.
 
         ``tree_in`` is a (nested) dict of owner-major buffers; under a mesh
         the call is wrapped in shard_map with the stack axis sharded over the
         owner axes (no collectives inside — each device handles its own
         matrices); without one, ``fn`` runs directly (unit tests).
-        ``state_ndims`` is unused today (shard_map infers specs from leaf
-        ranks) and reserved for ragged-rank extensions.
+        shard_map infers the per-leaf specs from leaf ranks.
         """
         if self.mesh is None:
             return fn(tree_in)

@@ -55,7 +55,7 @@ def momentum_update(mom: jax.Array, grad: jax.Array, cfg):
 
 def apply_wd_and_lr(update: jax.Array, param: jax.Array, cfg) -> jax.Array:
     # fp32 update math when the master params are fp32; for bf16-master
-    # configs (DESIGN.md §8) stay in bf16 — the fp32 temp would be the
+    # configs (docs/DESIGN.md §8) stay in bf16 — the fp32 temp would be the
     # largest buffer in the program.
     cd = jnp.float32 if param.dtype == jnp.float32 else param.dtype
     u = update.astype(cd) + cfg.weight_decay * param.astype(cd)

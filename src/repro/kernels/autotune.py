@@ -110,13 +110,14 @@ def analytical_score(bm: int, bk: int, m: int, k: int,
 
 def tune(mode: str, m: int, k: int, dtype: str = "float32", *,
          backend: str = "analytical", batch: int = 1,
-         measure_fn=None, cache_path: str = _DEFAULT_CACHE
+         measure_fn=None, cache_path: Optional[str] = None
          ) -> tuple[int, int]:
     """Search candidates and cache the winner.
 
     ``measure_fn(bm, bk) -> seconds`` overrides the scorer (the CPU test
     harness and, on real hardware, the TPU timer plug in here).
     """
+    cache_path = _DEFAULT_CACHE if cache_path is None else cache_path
     key = _key(mode, m, k, dtype)
     with _lock:
         _load(cache_path)
@@ -166,8 +167,9 @@ def _measure_wall(mode: str, bm: int, bk: int, m: int, k: int,
 
 
 def lookup(mode: str, m: int, k: int, dtype: str,
-           cache_path: str = _DEFAULT_CACHE) -> tuple[int, int]:
+           cache_path: Optional[str] = None) -> tuple[int, int]:
     """Cache hit or analytic tune — never measures (safe inside jit tracing)."""
+    cache_path = _DEFAULT_CACHE if cache_path is None else cache_path
     key = _key(mode, m, k, dtype)
     with _lock:
         _load(cache_path)
@@ -175,6 +177,41 @@ def lookup(mode: str, m: int, k: int, dtype: str,
     if hit is not None:
         return hit
     return tune(mode, m, k, dtype, backend="analytical", cache_path=cache_path)
+
+
+def plan_shapes(plan) -> list[tuple[str, int, int]]:
+    """Every (mode, m, k) kernel launch a dedication plan can produce.
+
+    The Gram NS schedule per (m, n) shape group launches one m×n SYRK (G₀),
+    then m×m ``gram_poly`` / ``symmul`` products — so a plan's full kernel
+    footprint is three modes per distinct Gram dimension plus one SYRK per
+    distinct group shape.
+    """
+    shapes: set[tuple[str, int, int]] = set()
+    for g in plan.groups.values():
+        m, n = g.key
+        shapes.add(("syrk", m, n))
+        shapes.add(("gram_poly", m, m))
+        shapes.add(("symmul", m, m))
+    return sorted(shapes)
+
+
+def prewarm_plan(plan, *, dtypes=("float32",), backend: str = "analytical",
+                 cache_path: Optional[str] = None) -> int:
+    """Pre-warm the persistent cache for every shape in a dedication plan.
+
+    Called at optimizer init (core/api.py): the paper's §3.3 workflow tunes
+    once per (mode, shape, dtype) because "the same parameter shapes recur
+    throughout training" — after this, ``lookup`` inside the jit'd step never
+    falls back to an un-cached tune.  Returns the number of cache entries
+    covered (hit or newly tuned).
+    """
+    n = 0
+    for dt in dtypes:
+        for mode, m, k in plan_shapes(plan):
+            tune(mode, m, k, str(dt), backend=backend, cache_path=cache_path)
+            n += 1
+    return n
 
 
 def clear_memory_cache() -> None:

@@ -4,7 +4,7 @@ These are the semantic references the kernel tests ``assert_allclose``
 against, and also the execution path used on CPU and in the multi-pod
 dry-run (Pallas interpret mode unrolls the grid into enormous HLO, so the
 dry-run lowers this path and the roofline harness applies the analytic
-symmetric-kernel FLOP adjustment — see DESIGN.md §2).
+symmetric-kernel FLOP adjustment — see docs/DESIGN.md §2).
 
 All functions accept arbitrary leading batch dims and accumulate in fp32.
 """

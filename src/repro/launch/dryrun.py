@@ -48,7 +48,7 @@ RESULT_DIR = os.path.abspath(os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "../../..", "experiments",
     "dryrun"))
 
-# Memory policy (DESIGN.md §8): ≥340B configs use ZeRO-3 param sharding and
+# Memory policy (docs/DESIGN.md §8): ≥340B configs use ZeRO-3 param sharding and
 # bf16 optimizer math end-to-end.
 BIG_ARCHS = {"nemotron-4-340b", "deepseek-v3-671b", "kimi-k2-1t-a32b"}
 MID_ARCHS = {"qwen2.5-14b", "llava-next-mistral-7b"}

@@ -12,7 +12,7 @@ the operand sizes of every all-gather / all-reduce / reduce-scatter /
 all-to-all / collective-permute op.
 
 Kernel adjustment: the dry-run lowers the pure-jnp Gram-NS path (Pallas
-grids cannot be lowered on the CPU backend — DESIGN.md §2), so the HLO
+grids cannot be lowered on the CPU backend — docs/DESIGN.md §2), so the HLO
 compute term counts full GEMMs for the symmetric products.  On TPU the
 symmetric kernels execute ~half of that; we report both the raw-HLO term and
 the kernel-adjusted term using the analytic model in core/gram_ns.py.

@@ -202,7 +202,7 @@ def _chunked_sdpa(qg, k, v, scale, qpos, kpos, causal, window,
     ``q_one_block``: keep the whole query axis as a single block (scan only
     over KV).  Used when q is sequence-sharded over 'model' — lax.map over a
     sharded block axis would be a *sequential* scan over a sharded dim,
-    which silently replicates (EXPERIMENTS.md §Perf, qwen prefill)."""
+    which silently replicates (docs/DESIGN.md §9, qwen prefill)."""
     B, S, G, R, hd = qg.shape
     T = k.shape[1]
     hv = v.shape[-1]
@@ -304,7 +304,7 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
         q = jax.lax.with_sharding_constraint(q, pin)
         # k/v replicated over the seq axis (each q block reads all of them);
         # otherwise GSPMD shards the contracting head_dim and emits an
-        # all-reduce per attention block (EXPERIMENTS.md §Perf, qwen prefill)
+        # all-reduce per attention block (docs/DESIGN.md §9, qwen prefill)
         kv_pin = _P(cfg.batch_axes, None, None, None)
         k = jax.lax.with_sharding_constraint(k, kv_pin)
         v = jax.lax.with_sharding_constraint(v, kv_pin)

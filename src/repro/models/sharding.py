@@ -49,7 +49,7 @@ def param_specs(cfg, params_tree, mesh, *, zero3: bool = False):
     both constraints the partitioner's cheapest plan is to all-gather each
     layer's weights transiently inside the scan — FSDP semantics.  Without
     the activation pins it instead lowers to accidental 2D-TP (activations
-    feature-sharded over 'data', batch replication) — EXPERIMENTS.md §Perf,
+    feature-sharded over 'data', batch replication) — docs/DESIGN.md §9,
     nemotron iterations.
     """
     zaxis = "data" if (zero3 and "data" in mesh.axis_names) else None
@@ -70,7 +70,7 @@ def param_specs(cfg, params_tree, mesh, *, zero3: bool = False):
             # ZeRO-3 'data' goes on the d_ff dim in Megatron pairing —
             # out-dim for gate/up, in-dim for down — so the expert FFN incurs
             # ONE activation all-reduce instead of one per GEMM (contracting
-            # on a sharded din); EXPERIMENTS.md §Perf, kimi iteration.
+            # on a sharded din); docs/DESIGN.md §9, kimi iteration.
             if name in _IN_SHARDED:      # down_proj (L, E, dff, d)
                 return P(*([None] * (rank - 3)),
                          _guard(mesh, shape[-3], "model"),

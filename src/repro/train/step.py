@@ -5,10 +5,21 @@ forward/backward on the DP/TP-sharded model, then the optimizer transform —
 owner-centric DMuon, gather-then-compute Muon-AG, or AdamW, selected by the
 MuonConfig the caller provides.  The optimizer's owner transposes and the
 publish all-gathers sit in the same XLA program as fwd/bwd, so the scheduler
-overlaps them with step compute (DESIGN.md §2).
+overlaps them with step compute (docs/DESIGN.md §2).
 
 Microbatching: ``accum_steps`` splits the global batch on the leading axis
 and accumulates grads with a lax.scan (memory ∝ one microbatch).
+
+Pipelines (``pipeline=`` / ``MuonConfig.pipeline``; docs/DESIGN.md §6):
+
+* ``"fused"``    — the optimizer runs as one post-backward phase (default).
+* ``"bucketed"`` — per-Gram-bucket stage_in/compute/publish schedule
+  (core/pipeline.py).  With ``accum_steps > 1`` the matrix gradients are
+  additionally packed to the owner layout INSIDE the microbatch scan and
+  accumulated there, so each microbatch's staged all-to-alls overlap the next
+  microbatch's forward/backward instead of forming a post-backward barrier.
+  Bit-exact with ``"fused"`` on every registry variant
+  (tests/test_pipeline.py).
 """
 
 from __future__ import annotations
@@ -30,7 +41,7 @@ def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
     ``take_along_axis`` over a vocab-sharded logits tensor forces the SPMD
     partitioner to replicate the batch dim (a full-logits all-reduce per
-    microbatch — see EXPERIMENTS.md §Perf).  The where/sum form reduces over
+    microbatch — see docs/DESIGN.md §9).  The where/sum form reduces over
     the sharded vocab axis locally and only all-reduces (B, S) scalars.
     """
     lg = logits.astype(jnp.float32)
@@ -68,14 +79,38 @@ def make_loss_fn(cfg, mesh=None):
 
 def make_train_step(cfg, opt: Muon, mesh=None, *, accum_steps: int = 1,
                     donate: bool = True, grad_specs=None,
-                    accum_dtype=jnp.float32):
+                    accum_dtype=jnp.float32, pipeline: Optional[str] = None,
+                    prestage: Optional[bool] = None):
     """Returns ``step(state, batch) -> state`` (jit'd when mesh is given).
 
     ``grad_specs``: optional PartitionSpec pytree matching params — pins the
     gradient accumulator to the parameter shardings (otherwise the SPMD
     partitioner may replicate the fp32 accumulator, which at 671B+ scale is
     the largest buffer in the program).
+
+    ``pipeline``: overrides ``opt.config.pipeline`` ('fused' | 'bucketed');
+    see the module docstring and docs/DESIGN.md §6.
+
+    ``prestage``: force the accumulation-overlapped staging on/off (None =
+    auto).  Auto enables it for bucketed owner mode with accumulation on a
+    multi-device mesh: per-microbatch staging only pays when the owner
+    all-to-alls are real transfers that can ride under the next
+    microbatch's fwd/bwd — on one device it is N packs instead of one.
+    Forcing it on is bit-exact either way (tests/test_pipeline.py).
     """
+    if pipeline is not None and pipeline != opt.config.pipeline:
+        opt = opt.replace(pipeline=pipeline)
+    # The accumulation-overlapped schedule: stage matrix grads to owners
+    # per microbatch inside the scan.  Compression accumulates its error
+    # feedback on the SUMMED training-layout gradient, so it keeps the
+    # unstaged path.
+    multi_device = mesh is not None and mesh.devices.size > 1
+    if prestage is None:
+        prestage = multi_device
+    prestage = (prestage and opt.config.pipeline == "bucketed"
+                and accum_steps > 1
+                and opt.effective_mode == "owner"
+                and not opt.config.compress_grads)
     loss_fn = make_loss_fn(cfg, mesh)
 
     def _pin(tree):
@@ -85,6 +120,19 @@ def make_train_step(cfg, opt: Muon, mesh=None, *, accum_steps: int = 1,
             lambda x, s: jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, s)), tree, grad_specs,
             is_leaf=lambda x: x is None)
+
+    def split(x):
+        out = x.reshape((accum_steps, -1) + x.shape[1:])
+        if mesh is not None:
+            # keep each microbatch DP-sharded: the reshape otherwise lets
+            # the partitioner replicate the batch axis inside the scan
+            dp = shard_rules.dp_axes(mesh)
+            from repro.models.sharding import _axis_size
+            if out.shape[1] % _axis_size(mesh, dp) == 0:
+                out = jax.lax.with_sharding_constraint(
+                    out, NamedSharding(mesh, P(
+                        None, dp, *([None] * (out.ndim - 2)))))
+        return out
 
     def compute_grads(params, batch):
         if accum_steps == 1:
@@ -97,18 +145,6 @@ def make_train_step(cfg, opt: Muon, mesh=None, *, accum_steps: int = 1,
                     _pin(jax.tree.map(lambda a, g: a + g.astype(a.dtype),
                                       grad_acc, grads))), None
 
-        def split(x):
-            out = x.reshape((accum_steps, -1) + x.shape[1:])
-            if mesh is not None:
-                # keep each microbatch DP-sharded: the reshape otherwise lets
-                # the partitioner replicate the batch axis inside the scan
-                dp = shard_rules.dp_axes(mesh)
-                from repro.models.sharding import _axis_size
-                if out.shape[1] % _axis_size(mesh, dp) == 0:
-                    out = jax.lax.with_sharding_constraint(
-                        out, NamedSharding(mesh, P(
-                            None, dp, *([None] * (out.ndim - 2)))))
-            return out
         micro_batches = jax.tree.map(split, batch)
         zero = _pin(jax.tree.map(
             lambda p: jnp.zeros(p.shape, accum_dtype), params))
@@ -117,9 +153,66 @@ def make_train_step(cfg, opt: Muon, mesh=None, *, accum_steps: int = 1,
         inv = 1.0 / accum_steps
         return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
+    if prestage:
+        from repro.core.muon import _matrix_and_rest
+        from repro.core.pipeline import BucketPipeline
+        pipe = BucketPipeline(opt.plan, opt.config, mesh, opt.variant)
+
+        rest_specs = None
+        if mesh is not None and grad_specs is not None:
+            from repro.core.dedication import _key_str
+            rest_specs = {}
+            for kp, spec in jax.tree_util.tree_leaves_with_path(
+                    grad_specs, is_leaf=lambda x: x is None
+                    or isinstance(x, P)):
+                rest_specs["/".join(_key_str(k) for k in kp)] = spec
+
+        def _pin_rest(rest):
+            if rest_specs is None:
+                return rest
+            return {p: g if rest_specs.get(p) is None
+                    else jax.lax.with_sharding_constraint(
+                        g, NamedSharding(mesh, rest_specs[p]))
+                    for p, g in rest.items()}
+
+        def compute_grads_staged(params, batch):
+            """(loss, staged owner-layout matrix grads, rest grads) with the
+            stage_in all-to-alls issued inside the scan, per microbatch —
+            under the next microbatch's fwd/bwd rather than after it."""
+            def micro(carry, mb):
+                loss_acc, staged_acc, rest_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gm, gr, _ = _matrix_and_rest(opt.plan, grads)
+                st = pipe.stage_in_all(gm, dtype=accum_dtype)
+                staged_acc = {k: pipe.layout.constrain(staged_acc[k] + st[k])
+                              for k in staged_acc}
+                rest_acc = _pin_rest(
+                    {p: rest_acc[p] + gr[p].astype(accum_dtype)
+                     for p in rest_acc})
+                return (loss_acc + loss, staged_acc, rest_acc), None
+
+            micro_batches = jax.tree.map(split, batch)
+            zero_staged = pipe.zeros_staged(accum_dtype)
+            _, rest_params, _ = _matrix_and_rest(opt.plan, params)
+            zero_rest = _pin_rest({p: jnp.zeros(v.shape, accum_dtype)
+                                   for p, v in rest_params.items()})
+            (loss, staged, rest), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_staged, zero_rest),
+                micro_batches)
+            inv = 1.0 / accum_steps
+            return (loss * inv, {k: v * inv for k, v in staged.items()},
+                    {p: g * inv for p, g in rest.items()})
+
     def step(state: TrainState, batch) -> TrainState:
-        loss, grads = compute_grads(state.params, batch)
-        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        if prestage:
+            loss, staged, rest = compute_grads_staged(state.params, batch)
+            updates, opt_state = opt.update_staged(staged, rest,
+                                                   state.opt_state,
+                                                   state.params)
+        else:
+            loss, grads = compute_grads(state.params, batch)
+            updates, opt_state = opt.update(grads, state.opt_state,
+                                            state.params)
         params = jax.tree.map(jnp.add, state.params, updates)
         ema = jnp.where(state.step == 0, loss,
                         0.98 * state.loss_ema + 0.02 * loss)

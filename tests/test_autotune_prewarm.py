@@ -1,0 +1,100 @@
+"""Autotune cache pre-warming at optimizer init (kernels/autotune.py).
+
+The paper's §3.3 workflow tunes once per (mode, shape, dtype) and dispatches
+cached winners afterwards; here the optimizer pre-warms the persistent cache
+for every kernel shape its dedication plan can launch, and the cached
+winners must agree with the analytical roofline scorer re-run from scratch.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api
+from repro.core.muon import MuonConfig
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Point the persistent cache at a tmp file and reset the memory cache
+    around each test (the module caches are process-global)."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setattr(autotune, "_DEFAULT_CACHE", path)
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def _params():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    return {
+        "wq": jax.random.normal(ks[0], (3, 64, 64)) * 0.02,
+        "up": jax.random.normal(ks[1], (3, 64, 256)) * 0.02,
+        "down": jax.random.normal(ks[2], (3, 256, 64)) * 0.02,
+        "norm": jnp.ones((3, 64)),
+    }
+
+
+def test_plan_shapes_covers_all_kernel_modes():
+    plan = api.dedicate_params(_params(), num_owners=2, strategy="greedy")
+    shapes = autotune.plan_shapes(plan)
+    gram_dims = {g.key[0] for g in plan.groups.values()}
+    # one syrk per distinct (m, n), gram_poly + symmul per distinct m
+    assert {(mode, m) for mode, m, _ in shapes if mode != "syrk"} == \
+        {(mode, m) for m in gram_dims for mode in ("gram_poly", "symmul")}
+    syrks = {(m, k) for mode, m, k in shapes if mode == "syrk"}
+    assert syrks == {g.key for g in plan.groups.values()}
+
+
+def test_prewarm_populates_persistent_cache(_isolated_cache):
+    plan = api.dedicate_params(_params(), num_owners=2, strategy="greedy")
+    n = autotune.prewarm_plan(plan, dtypes=("float32", "bfloat16"),
+                              cache_path=_isolated_cache)
+    shapes = autotune.plan_shapes(plan)
+    assert n == 2 * len(shapes)
+    with open(_isolated_cache) as f:
+        cached = json.load(f)
+    for dt in ("float32", "bfloat16"):
+        for mode, m, k in shapes:
+            assert f"{mode}:{m}x{k}:{dt}" in cached, (mode, m, k, dt)
+
+
+def test_cached_winners_match_analytical_scorer(_isolated_cache):
+    """Cross-check: every cached winner is the argmin of the analytical
+    roofline score over the candidate block space, recomputed from scratch."""
+    plan = api.dedicate_params(_params(), num_owners=2, strategy="greedy")
+    autotune.prewarm_plan(plan, cache_path=_isolated_cache)
+    with open(_isolated_cache) as f:
+        cached = json.load(f)
+    for mode, m, k in autotune.plan_shapes(plan):
+        winner = tuple(cached[f"{mode}:{m}x{k}:float32"])
+        best = min(autotune.candidate_blocks(m, k, 4),
+                   key=lambda bk: autotune.analytical_score(*bk, m, k, 4))
+        assert winner == best, (mode, m, k, winner, best)
+        # and the public lookup path returns exactly the cached winner
+        assert autotune.lookup(mode, m, k, "float32",
+                               cache_path=_isolated_cache) == winner
+
+
+def test_muon_init_prewarms(_isolated_cache):
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    api.Muon(plan, config=MuonConfig(mode="owner"))
+    with open(_isolated_cache) as f:
+        cached = json.load(f)
+    for mode, m, k in autotune.plan_shapes(plan):
+        assert f"{mode}:{m}x{k}:float32" in cached
+
+
+def test_prewarm_opt_out_and_elementwise_skip(_isolated_cache):
+    import os
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    api.Muon(plan, config=MuonConfig(mode="owner", autotune_prewarm=False))
+    assert not os.path.exists(_isolated_cache)
+    # the adamw variant never launches Gram kernels — nothing to warm
+    api.Muon(plan, config=MuonConfig(variant="adamw"))
+    assert not os.path.exists(_isolated_cache)

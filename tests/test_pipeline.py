@@ -1,0 +1,289 @@
+"""The bucketed optimizer pipeline (core/pipeline.py, docs/DESIGN.md §6).
+
+Bit-exactness is the contract: the bucketed schedule is the fused owner
+update *reordered*, so on one device every variant must produce bitwise
+identical updates and state — including the accumulation-overlapped entry
+(per-microbatch staging inside the scan), which rides on packing being a
+permutation + zero-pad.  Plus the elasticity of in-flight staged state.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.gram_ns import GramNSConfig
+from repro.core.muon import MuonConfig
+from repro.core.owner_comms import group_key_str
+from repro.core.pipeline import BucketPipeline, reshard_staged
+
+VARIANTS = ["muon", "normuon", "muonbp", "adamw"]
+
+
+def _tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return {
+        "blocks": {
+            "wq": jax.random.normal(ks[0], (3, 32, 32)) * 0.02,
+            "wk": jax.random.normal(ks[1], (3, 32, 16)) * 0.02,
+            "up": jax.random.normal(ks[2], (3, 32, 128)) * 0.02,
+            "down": jax.random.normal(ks[3], (3, 128, 32)) * 0.02,
+            "norm_scale": jnp.ones((3, 32)),
+        },
+        "embed_table": jax.random.normal(ks[4], (100, 32)) * 0.02,
+    }
+
+
+def _grads(seed=1):
+    return jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + x.size % 97),
+                                    x.shape) * 0.1, _tree())
+
+
+def _mk(variant, pipeline, **kw):
+    params = _tree()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    kw.setdefault("ns", GramNSConfig(num_steps=5))
+    cfg = MuonConfig(variant=variant, pipeline=pipeline, learning_rate=0.1,
+                     momentum=0.9, **kw)
+    return params, plan, api.Muon(plan, config=cfg)
+
+
+def _run(opt, params, n=3):
+    state = opt.init(params)
+    for t in range(n):
+        u, state = opt.update(_grads(seed=t), state, params)
+        params = jax.tree.map(lambda p, d: p + d, params, u)
+    return params, state
+
+
+def _assert_trees_equal(a, b, msg=""):
+    fa = jax.tree_util.tree_leaves_with_path(a)
+    fb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(fa) == len(fb), (msg, len(fa), len(fb))
+    for (kp, x), (_, y) in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{msg}:{jax.tree_util.keystr(kp)}")
+
+
+# ----------------------------------------------------- schedule structure
+
+def test_plan_is_multi_bucket():
+    # the fixture must actually exercise the pipeline: >= 2 Gram buckets
+    _, plan, _ = _mk("muon", "bucketed")
+    assert len(plan.buckets) >= 2, plan.buckets
+
+
+def test_schedule_orders_buckets_largest_first():
+    _, plan, opt = _mk("muon", "bucketed")
+    pipe = BucketPipeline(plan, opt.config, spec=opt.variant)
+    ms = [m for m, _ in pipe.schedule]
+    assert ms == sorted(ms, reverse=True)
+    assert sum(len(keys) for _, keys in pipe.schedule) == len(plan.groups)
+
+
+def test_bucketed_rejects_gather_mode():
+    params = _tree()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    with pytest.raises(ValueError, match="pipeline"):
+        opt = api.Muon(plan, config=MuonConfig(mode="gather",
+                                               pipeline="bucketed"))
+        opt.update(_grads(), opt.init(params), params)
+
+
+def test_unknown_pipeline_rejected():
+    params = _tree()
+    plan = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    with pytest.raises(ValueError, match="pipeline"):
+        opt = api.Muon(plan, config=MuonConfig(pipeline="wavefront"))
+        opt.update(_grads(), opt.init(params), params)
+
+
+# ------------------------------------------------- bit-exactness (fused ==)
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_bucketed_bit_exact_with_fused(variant):
+    params_f, state_f = _run(_mk(variant, "fused")[2], _tree())
+    params_b, state_b = _run(_mk(variant, "bucketed")[2], _tree())
+    _assert_trees_equal(params_f, params_b, f"{variant}:params")
+    _assert_trees_equal(state_f.momentum, state_b.momentum,
+                        f"{variant}:momentum")
+    _assert_trees_equal(state_f.variant_state, state_b.variant_state,
+                        f"{variant}:variant_state")
+    _assert_trees_equal(state_f.adamw, state_b.adamw, f"{variant}:adamw")
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_bucketed_bit_exact_with_bucket_fusion(variant):
+    # ns.bucket_fusion fuses the iterate phase within a bucket — in both
+    # schedules the fusion unit IS the bucket, so still bit-exact
+    kw = {"ns": GramNSConfig(num_steps=5, bucket_fusion=True)}
+    params_f, _ = _run(_mk(variant, "fused", **kw)[2], _tree())
+    params_b, _ = _run(_mk(variant, "bucketed", **kw)[2], _tree())
+    _assert_trees_equal(params_f, params_b, variant)
+
+
+def test_bucketed_bit_exact_with_compress_grads():
+    # compression's error feedback lives in the training layout and is
+    # applied before stage_in — identical in both schedules
+    kw = {"compress_grads": True}
+    params_f, state_f = _run(_mk("muon", "fused", **kw)[2], _tree())
+    params_b, state_b = _run(_mk("muon", "bucketed", **kw)[2], _tree())
+    _assert_trees_equal(params_f, params_b, "params")
+    _assert_trees_equal(state_f.error_feedback, state_b.error_feedback, "ef")
+
+
+# ---------------------------------------- accumulation-overlapped schedule
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_prestaged_accum_bit_exact(variant):
+    """stage_in inside the scan + update_staged == accumulate + update.
+
+    Packing is a permutation + zero-pad, so summing packed per-microbatch
+    gradients, scaling by 1/accum and casting to pack_dtype commutes with
+    packing the averaged gradient — for every registry variant.
+    """
+    from repro import configs
+    from repro.data.pipeline import DataConfig, batch_for_step
+    from repro.models import model_fns
+    from repro.train.step import init_state, make_train_step
+
+    cfg = configs.get("smollm-360m", reduced=True, n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=176, vocab=256,
+                      remat=False)
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes, num_owners=2, strategy="greedy")
+    assert len(plan.buckets) >= 2     # GQA kv heads give a second bucket
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    batch = batch_for_step(dcfg, 0)
+
+    outs = {}
+    for prestage in (False, True):
+        opt = api.Muon(plan, config=MuonConfig(
+            mode="owner", variant=variant, pipeline="bucketed",
+            ns=GramNSConfig(num_steps=3)))
+        state = init_state(cfg, opt, jax.random.PRNGKey(0))
+        step = make_train_step(cfg, opt, donate=False, accum_steps=2,
+                               prestage=prestage)
+        for _ in range(2):
+            state = step(state, batch)
+        outs[prestage] = state
+    _assert_trees_equal(outs[False].params, outs[True].params,
+                        f"{variant}:params")
+    np.testing.assert_array_equal(np.asarray(outs[False].loss_ema),
+                                  np.asarray(outs[True].loss_ema))
+    _assert_trees_equal(outs[False].opt_state.momentum,
+                        outs[True].opt_state.momentum, f"{variant}:momentum")
+    _assert_trees_equal(outs[False].opt_state.variant_state,
+                        outs[True].opt_state.variant_state,
+                        f"{variant}:vstate")
+
+
+def test_prestage_refused_with_compress_grads():
+    from repro.core.muon import muon_update_staged
+    params = _tree()
+    plan = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    cfg = MuonConfig(mode="owner", pipeline="bucketed", compress_grads=True)
+    with pytest.raises(ValueError, match="compress_grads"):
+        muon_update_staged(plan, {}, {}, None, params, cfg)
+
+
+# ------------------------------------------------- elastic in-flight state
+
+def test_staged_state_elastic_reshard():
+    """A preemption mid-accumulation: owner-major staged gradient sums are
+    repacked to a new owner count, the interrupted step finishes there, and
+    the result matches the uninterrupted run bit-for-bit."""
+    params = _tree()
+    g1, g2 = _grads(seed=11), _grads(seed=12)
+
+    def staged_sum(plan, opt):
+        pipe = BucketPipeline(plan, opt.config, spec=opt.variant)
+        from repro.core.muon import _matrix_and_rest
+        out = None
+        for g in (g1, g2):
+            gm, _, _ = _matrix_and_rest(plan, g)
+            st = pipe.stage_in_all(gm, dtype=jnp.float32)
+            out = st if out is None else {k: out[k] + st[k] for k in out}
+        return {k: v * 0.5 for k, v in out.items()}
+
+    def finish(plan, opt, staged):
+        from repro.core.muon import _matrix_and_rest
+        _, gr1, _ = _matrix_and_rest(plan, g1)
+        _, gr2, _ = _matrix_and_rest(plan, g2)
+        rest = {p: (gr1[p] + gr2[p]) * 0.5 for p in gr1}
+        return opt.update_staged(staged, rest, opt.init(params), params)
+
+    def mk(n):
+        plan = api.dedicate_params(params, num_owners=n, strategy="greedy")
+        return plan, api.Muon(plan, config=MuonConfig(
+            mode="owner", pipeline="bucketed", learning_rate=0.1,
+            momentum=0.9, ns=GramNSConfig(num_steps=5)))
+
+    plan4, opt4 = mk(4)
+    plan2, opt2 = mk(2)
+
+    # uninterrupted at 2 owners
+    u_ref, _ = finish(plan2, opt2, staged_sum(plan2, opt2))
+    # interrupted at 4 owners mid-accumulation, resumed at 2
+    staged4 = staged_sum(plan4, opt4)
+    staged2 = reshard_staged(staged4, plan4, plan2)
+    u_el, _ = finish(plan2, opt2, staged2)
+    _assert_trees_equal(u_ref, u_el, "elastic")
+
+
+def test_reshard_staged_roundtrip():
+    params = _tree()
+    plan4 = api.dedicate_params(params, num_owners=4, strategy="greedy")
+    plan2 = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    opt = api.Muon(plan4, config=MuonConfig(mode="owner",
+                                            pipeline="bucketed"))
+    pipe = BucketPipeline(plan4, opt.config, spec=opt.variant)
+    from repro.core.muon import _matrix_and_rest
+    gm, _, _ = _matrix_and_rest(plan4, _grads())
+    staged = pipe.stage_in_all(gm, dtype=jnp.float32)
+    back = reshard_staged(reshard_staged(staged, plan4, plan2),
+                          plan2, plan4)
+    for key, grp in plan4.groups.items():
+        skey = group_key_str(key)
+        rows = grp.pack_index.shape[0] if hasattr(grp, "pack_index") else None
+        np.testing.assert_array_equal(
+            np.asarray(staged[skey]), np.asarray(back[skey]),
+            err_msg=f"{skey} rows={rows}")
+
+
+# ------------------------------------------------------- config surface
+
+def test_replace_returns_new_opt():
+    _, _, opt = _mk("muon", "fused")
+    opt_b = opt.replace(pipeline="bucketed")
+    assert opt.config.pipeline == "fused"
+    assert opt_b.config.pipeline == "bucketed"
+    assert opt_b.plan is opt.plan
+
+
+def test_train_step_pipeline_override():
+    from repro import configs
+    from repro.models import model_fns
+    from repro.train.step import make_train_step
+
+    cfg = configs.get("smollm-360m", reduced=True, n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=176, vocab=256,
+                      remat=False)
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes, num_owners=1, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig(mode="owner"))
+    make_train_step(cfg, opt, donate=False, pipeline="bucketed")
+    assert opt.config.pipeline == "fused"   # caller's opt untouched
+
+
+def test_pipeline_validation_in_resolve():
+    from repro.core.muon import _resolve
+    with pytest.raises(ValueError, match="pipeline"):
+        _resolve(dataclasses.replace(MuonConfig(), pipeline="nope"))
