@@ -30,6 +30,10 @@ from benchmarks.common import BENCH_SCHEMA_VERSION
 REQUIRED_FIELDS = ("name", "config", "variant", "mode", "pipeline",
                    "median_us", "p90_us", "samples", "unit", "derived")
 
+# measured rows of the serve suite additionally carry serving metrics
+# (median decode-step time alone doesn't capture a scheduler regression)
+SERVE_REQUIRED_FIELDS = ("ttft_ms", "tokens_per_sec")
+
 
 def load_and_validate(path: str) -> dict:
     """Parse one BENCH_*.json and enforce the schema; raises ValueError."""
@@ -56,6 +60,16 @@ def load_and_validate(path: str) -> dict:
             # derived rows (samples == 0) may carry signed model values
             raise ValueError(
                 f"{path}: records[{i}] ({rec['name']}) has negative values")
+        if doc.get("suite") == "serve" and rec["samples"] > 0:
+            missing = [k for k in SERVE_REQUIRED_FIELDS if k not in rec]
+            if missing:
+                raise ValueError(
+                    f"{path}: records[{i}] ({rec['name']}) is a measured "
+                    f"serve row missing fields {missing}")
+            if any(rec[k] < 0 for k in SERVE_REQUIRED_FIELDS):
+                raise ValueError(
+                    f"{path}: records[{i}] ({rec['name']}) has negative "
+                    f"serving metrics")
     return doc
 
 
@@ -86,6 +100,18 @@ def diff(baseline: dict, current: dict,
             regressions.append(line)
         elif abs(delta) > threshold_pct:
             notes.append(f"improvement: {line}")
+        # serve rows: a throughput DROP is a regression (higher is better)
+        if ("tokens_per_sec" in rec and "tokens_per_sec" in ref
+                and ref["tokens_per_sec"] > 0):
+            drop = (ref["tokens_per_sec"] - rec["tokens_per_sec"]) \
+                / ref["tokens_per_sec"] * 100
+            tline = (f"{tag}: {ref['tokens_per_sec']:.1f} -> "
+                     f"{rec['tokens_per_sec']:.1f} tokens/sec "
+                     f"({-drop:+.1f}%)")
+            if drop > threshold_pct:
+                regressions.append(tline)
+            elif drop < -threshold_pct:
+                notes.append(f"improvement: {tline}")
     missing = set(base) - {_key(r) for r in current["records"]}
     for k in sorted(missing):
         notes.append("baseline record missing from current: "

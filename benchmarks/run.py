@@ -25,7 +25,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (batching, breakdown, load_balance_bench,
-                            roofline_table, step_time)
+                            roofline_table, serve_bench, step_time)
     from benchmarks.common import record_to_csv, write_bench_json
     suites = {
         "step_time": step_time,              # Table 1 / Fig 8
@@ -33,6 +33,7 @@ def main() -> None:
         "batching": batching,                # Fig 7
         "load_balance": load_balance_bench,  # §3.4
         "roofline": roofline_table,          # §Roofline (from dry-run)
+        "serve": serve_bench,                # continuous-batching tier
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suite", nargs="*",

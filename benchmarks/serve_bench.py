@@ -1,0 +1,166 @@
+"""Serving-tier benchmark: continuous batching vs the one-shot baseline.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --arch smollm-360m --json
+
+Drives the ``repro.serve`` scheduler over CPU-scale analogues of the three
+assigned serving shapes (reduced geometry, same roles):
+
+    prefill_32k  prompt-heavy mix, short budgets      -> TTFT / prefill lane
+    decode_32k   uniform short prompts, mixed budgets -> decode throughput;
+                 also runs the static-batch one-shot baseline at the same
+                 batch size for the head-to-head speedup row
+    long_500k    one long prompt, chunked prefill     -> sub-quadratic archs
+                 only (same skip rule as the dry-run grid)
+
+Measured rows carry the usual median/p90 decode-step wall time *plus* the
+serving fields (``ttft_ms``, ``tokens_per_sec``, ...) — the serve-suite
+record shape benchmarks/check_regression.py validates and diffs (throughput
+drops are regressions, just like step-time rises).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __name__ == "__main__" and __package__ is None:  # direct execution
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import record, record_to_csv, write_bench_json
+
+# serve-suite extra fields on measured rows (validated by check_regression)
+SERVE_FIELDS = ("ttft_ms", "tokens_per_sec")
+
+# CPU-scale stand-ins for the assigned serving shapes: same roles, reduced
+# geometry (the real shapes are dry-run lowering targets, not CPU wall
+# clock).  `n` scales with --requests except for the long-prompt lane.
+SCENARIOS = {
+    "prefill_32k": dict(prompt_lens=(24, 32), new_tokens=(2, 6),
+                        max_len=48, chunk_len=None),
+    "decode_32k": dict(prompt_lens=(8,), new_tokens=(4, 96),
+                       budgets=(4, 4, 4, 96), max_len=112,
+                       chunk_len=None),
+    "long_500k": dict(prompt_lens=(96,), new_tokens=(2, 6),
+                      max_len=112, chunk_len=16, n=2),
+}
+
+
+def _serve_record(name, *, config, mode, variant, summary):
+    rec = record(name, config=config, mode=mode, variant=variant,
+                 value=0.0)
+    rec["median_us"] = summary["decode_step_us_median"]
+    rec["p90_us"] = summary["decode_step_us_p90"]
+    rec["samples"] = int(summary["decode_steps"])
+    rec["ttft_ms"] = summary["ttft_ms_median"]
+    rec["ttft_ms_p90"] = summary["ttft_ms_p90"]
+    rec["tokens_per_sec"] = summary["tokens_per_sec"]
+    rec["tokens_per_sec_per_chip"] = summary["tokens_per_sec_per_chip"]
+    rec["slot_occupancy"] = summary["slot_occupancy"]
+    rec["derived"] = (f"tps={summary['tokens_per_sec']:.1f} "
+                      f"ttft_ms={summary['ttft_ms_median']:.1f} "
+                      f"occ={summary['slot_occupancy']:.2f}")
+    return rec
+
+
+def run_records(arch: str = "smollm-360m", requests: int = 24,
+                num_slots: int = 8, seed: int = 0) -> list:
+    from repro import configs
+    from repro.configs import shapes
+    from repro.models import model_fns
+    from repro.serve import (RequestQueue, Scheduler, ServeConfig,
+                             run_oneshot)
+
+    cfg = configs.get(arch, reduced=True)
+    m = model_fns(cfg)
+    params = jax.jit(lambda k: m.init(cfg, k))(jax.random.PRNGKey(0))
+    enc_kw = {}
+    if cfg.encdec:
+        enc_kw = dict(frontend_dim=cfg.frontend_dim)
+
+    records = []
+    for scen, spec in SCENARIOS.items():
+        skip = shapes.cell_supported(cfg, scen)
+        if skip is not None:
+            records.append(record(f"serve/{scen}", config=arch,
+                                  mode=scen, variant="skip",
+                                  value=0.0, derived=skip))
+            continue
+        if cfg.encdec and spec["chunk_len"] is not None:
+            records.append(record(f"serve/{scen}", config=arch,
+                                  mode=scen, variant="skip", value=0.0,
+                                  derived="enc-dec prefills in one shot; "
+                                          "no chunked path"))
+            continue
+        n = spec.get("n", requests)
+        if cfg.encdec:  # uniform enc_len across the workload
+            spec = dict(spec, prompt_lens=spec["prompt_lens"][:1])
+        scfg = ServeConfig(num_slots=num_slots, max_len=spec["max_len"],
+                           chunk_len=spec["chunk_len"],
+                           enc_len=(spec["prompt_lens"][0]
+                                    if cfg.encdec else None))
+        sched = Scheduler(cfg, params, scfg)
+
+        def workload():
+            return RequestQueue.synthetic(
+                n, cfg.vocab, prompt_lens=spec["prompt_lens"],
+                new_tokens=spec["new_tokens"],
+                budgets=spec.get("budgets"), seed=seed, **enc_kw)
+
+        sched.run(workload())          # warmup: compile everything
+        summary = sched.run(workload()).summary()
+        records.append(_serve_record(
+            f"serve/{scen}", config=arch, mode=scen,
+            variant="continuous", summary=summary))
+
+        if scen == "decode_32k":       # head-to-head vs static batching
+            q = workload()
+            q.poll(0.0)
+            reqs = [q.pop_group(1)[0] for _ in range(len(q))]
+            run_oneshot(cfg, params, reqs, batch=num_slots,
+                        max_len=spec["max_len"])          # warmup
+            base = run_oneshot(cfg, params, reqs, batch=num_slots,
+                               max_len=spec["max_len"]).summary()
+            records.append(_serve_record(
+                f"serve/{scen}", config=arch, mode=scen,
+                variant="oneshot", summary=base))
+            speedup = (summary["tokens_per_sec"]
+                       / max(base["tokens_per_sec"], 1e-9))
+            records.append(record(
+                "serve/speedup_vs_oneshot", config=arch, mode=scen,
+                value=speedup, unit="ratio",
+                derived=f"continuous/oneshot tokens_per_sec at "
+                        f"batch={num_slots}"))
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="workload size for the mixed-traffic scenarios")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode-batch slots (and one-shot batch size)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR", help="write BENCH_serve.json to DIR "
+                                        "(default: repo root)")
+    args = ap.parse_args()
+
+    records = run_records(arch=args.arch, requests=args.requests,
+                          num_slots=args.slots, seed=args.seed)
+    print("name,us_per_call,derived")
+    for rec in records:
+        print(record_to_csv(rec), flush=True)
+    if args.json is not None:
+        path = os.path.join(args.json, "BENCH_serve.json")
+        write_bench_json(path, "serve", records)
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,78 +1,103 @@
-"""Serving example (deliverable b): batched prefill + decode loop.
+"""Serving example (deliverable b): one-shot batch or continuous batching.
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2.5-14b
-    PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
+    PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m \
+        --mode continuous --requests 12 --rate 50
 
-Runs the reduced config of the chosen architecture: prefill a batch of
-prompts, then decode N tokens with the KV-cache / recurrent-state machinery,
-reporting per-token latency.
+``--mode oneshot`` (default) is the original static-batch loop: prefill a
+batch of prompts together, decode in lockstep, report per-token latency.
+``--mode continuous`` drives the same reduced model through the serving
+tier (repro.serve): a synthetic request workload flows through the slot
+scheduler — insert on free, evict on budget, recycle cache rows — and the
+summary reports TTFT / throughput / slot occupancy.
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.models import model_fns
+from repro.serve import RequestQueue, Scheduler, ServeConfig, run_oneshot
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b",
                     choices=list(configs.ARCH_IDS))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", default="oneshot",
+                    choices=["oneshot", "continuous"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch (oneshot) / decode slots (continuous)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="continuous: synthetic workload size")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="continuous: arrivals/sec (default: all at t=0)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch, reduced=True)
     m = model_fns(cfg)
     params = jax.jit(lambda k: m.init(cfg, k))(jax.random.PRNGKey(0))
-    B, S = args.batch, args.prompt_len
+    S = args.prompt_len
     max_len = S + args.new_tokens + 8
+    enc_kw = dict(frontend_dim=cfg.frontend_dim) \
+        if (cfg.encdec or cfg.frontend is not None) else {}
+    if cfg.frontend == "patch":
+        # patch prompts carry a fixed image prefix, not per-token frames;
+        # the synthetic workload generates frames at frontend geometry
+        enc_kw = {}
 
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
-    extra = {}
-    prefix = 0
-    if cfg.encdec:
-        extra["frames"] = jax.random.normal(
-            ks[1], (B, S, cfg.frontend_dim)) * 0.1
-    elif cfg.frontend == "patch":
-        extra["patches"] = jax.random.normal(
-            ks[1], (B, cfg.frontend_len, cfg.frontend_dim)) * 0.1
-        prefix = cfg.frontend_len
+    if args.mode == "oneshot":
+        queue = RequestQueue.synthetic(
+            args.batch, cfg.vocab, prompt_lens=(S,),
+            new_tokens=(args.new_tokens + 1, args.new_tokens + 1),
+            seed=1, **enc_kw)
+        queue.poll(0.0)
+        reqs = [queue.pop_group(1)[0] for _ in range(len(queue))]
+        if cfg.frontend == "patch":
+            import numpy as np
+            rng = np.random.default_rng(1)
+            for r in reqs:
+                r.frames = (rng.standard_normal(
+                    (cfg.frontend_len, cfg.frontend_dim)) * 0.1
+                ).astype(np.float32)
+        metrics = run_oneshot(cfg, params, reqs, batch=args.batch,
+                              max_len=max_len)
+        s = metrics.summary()
+        print(f"oneshot: batch={args.batch} prompt={S} "
+              f"new={args.new_tokens}")
+        print(f"decoded {s['tokens']} tokens in {s['wall_s']:.2f}s "
+              f"({s['per_token_ms_median']:.1f} ms/token median, "
+              f"incl. compile)")
+        rec = next(iter(metrics.requests.values()))
+        print("sample token ids:", rec.tokens[:16])
+        return
 
-    t0 = time.perf_counter()
-    if cfg.encdec:
-        logits, cache = m.prefill(cfg, params, tokens,
-                                  frames=extra["frames"], max_len=max_len)
-    elif cfg.family == "ssm":
-        logits, cache = m.prefill(cfg, params, tokens, max_len)
-    else:
-        logits, cache = m.prefill(cfg, params, tokens, max_len + prefix,
-                                  **extra)
-    jax.block_until_ready(logits)
-    print(f"prefill: batch={B} prompt={S} "
-          f"({time.perf_counter()-t0:.2f}s incl. compile)")
-
-    decode = jax.jit(lambda p, t, c, pos: m.decode_step(cfg, p, t, c, pos))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    seqs = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.new_tokens):
-        logits, cache = decode(params, tok, cache,
-                               jnp.asarray(S + prefix + i, jnp.int32))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        seqs.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    out = jnp.stack(seqs, 1)
-    print(f"decoded {args.new_tokens} tokens x {B} seqs in {dt:.2f}s "
-          f"({dt/args.new_tokens*1e3:.1f} ms/token incl. first-step compile)")
-    print("sample token ids:", out[0, :16].tolist())
+    queue = RequestQueue.synthetic(
+        args.requests, cfg.vocab, prompt_lens=(S,),
+        new_tokens=(2, args.new_tokens), rate=args.rate, seed=1, **enc_kw)
+    scfg = ServeConfig(num_slots=args.batch, max_len=max_len,
+                       enc_len=S if cfg.encdec else None)
+    if cfg.frontend == "patch":
+        raise SystemExit("continuous mode: patch-frontend archs need "
+                         "per-request images; use --mode oneshot")
+    sched = Scheduler(cfg, params, scfg)
+    metrics = sched.run(queue)
+    s = metrics.summary()
+    print(f"continuous: slots={args.batch} requests={s['requests']} "
+          f"(rate={args.rate or 'all-at-once'})")
+    print(f"  tokens            {s['tokens']}  in {s['wall_s']:.2f}s "
+          f"(incl. compile)")
+    print(f"  tokens/sec        {s['tokens_per_sec']:.1f}")
+    print(f"  ttft ms           {s['ttft_ms_median']:.1f} median / "
+          f"{s['ttft_ms_p90']:.1f} p90")
+    print(f"  per-token ms      {s['per_token_ms_median']:.1f} median")
+    print(f"  decode steps      {s['decode_steps']}  "
+          f"(occupancy {s['slot_occupancy']:.2f})")
+    rec = next(iter(metrics.requests.values()))
+    print("sample token ids:", rec.tokens[:16])
 
 
 if __name__ == "__main__":

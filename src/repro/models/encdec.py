@@ -183,9 +183,11 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
 
 def decode_step(cfg: ArchConfig, params: Params, token: jax.Array, cache,
                 pos: jax.Array):
+    """pos: scalar shared position, or (B,) per-slot positions (continuous
+    batching — the self-attn cache rows advance independently)."""
     x = layers.embed(params["embed"], token[:, None]).astype(
         jnp.dtype(cfg.compute_dtype))
-    positions = pos[None] if pos.ndim == 0 else pos
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     rope_cs = _rope_for(cfg, positions)
 
     def body(h, scanned):

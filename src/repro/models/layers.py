@@ -144,12 +144,14 @@ def _pick_chunk(n: int, target: int) -> int:
 
 
 def _block_mask(qpos, kpos, *, causal, window, window_enabled):
-    """(qlen, klen) boolean mask from absolute positions, built on the fly."""
+    """Boolean mask from absolute positions, built on the fly.  qpos is
+    (qlen,) — or (B, qlen) when decode rows sit at per-slot positions
+    (continuous batching) — giving a (qlen, klen) / (B, qlen, klen) mask."""
     if not causal:
         return None
-    ok = kpos[None, :] <= qpos[:, None]
+    ok = qpos[..., :, None] >= kpos
     if window is not None:
-        okw = ok & (kpos[None, :] > qpos[:, None] - window)
+        okw = ok & (kpos > qpos[..., :, None] - window)
         if window_enabled is None:
             ok = okw
         else:  # traced per-layer flag (uniform-scan hybrid blocks)
@@ -187,7 +189,10 @@ def _sdpa(q, k, v, *, scale, qpos=None, kpos=None, causal=False,
     mask = _block_mask(qpos, kpos, causal=causal, window=window,
                        window_enabled=window_enabled)
     if mask is not None:
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        # (S,T) shared positions, or (B,S,T) per-row decode positions
+        mask = mask[None, None, None] if mask.ndim == 2 \
+            else mask[:, None, None]
+        logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bgrst,btgh->bsgrh", probs, v.astype(jnp.float32))
     # v's head dim may differ from q/k's (MLA: v_head_dim != qk dims)
@@ -260,11 +265,13 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
               static_cache: bool = False):
     """Self (xk=None) or cross attention with optional KV cache.
 
-    cache: (k_cache, v_cache) of (B, S_max, KV, hd); pos: scalar write
-    position (decode).  window_enabled: traced bool selecting the sliding
-    window mask at runtime (uniform-scan hybrid layers).  static_cache:
-    use the cache as-is without recomputing/updating K,V (decode-time cross
-    attention over precomputed encoder KV).
+    cache: (k_cache, v_cache) of (B, S_max, KV, hd); pos: write position —
+    a scalar shared by every row (prefill / lockstep decode) or a (B,)
+    vector of per-row positions (slot-based continuous batching, S == 1).
+    window_enabled: traced bool selecting the sliding window mask at runtime
+    (uniform-scan hybrid layers).  static_cache: use the cache as-is without
+    recomputing/updating K,V (decode-time cross attention over precomputed
+    encoder KV).
     Returns (out, new_cache).
     """
     B, S, _ = x.shape
@@ -290,10 +297,16 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
     if cache is not None:
         kc, vc = cache
         if xk is None:  # self-attn decode/prefill cache update
-            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                              (0, pos, 0, 0))
-            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                              (0, pos, 0, 0))
+            if jnp.ndim(pos) == 0:
+                kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                                  (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                                  (0, pos, 0, 0))
+            else:  # per-row slot positions: scatter one row each
+                assert S == 1, "vector pos is a single-token decode path"
+                rows = jnp.arange(B)
+                kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
+                vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
         k, v = kc, vc
         new_cache = (kc, vc)
 
@@ -314,7 +327,8 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
                     q_one_block=seq_pinned)
     else:
         offset = pos if pos is not None else 0
-        qpos = offset + jnp.arange(S)
+        qpos = offset[:, None] + jnp.arange(S) if jnp.ndim(offset) == 1 \
+            else offset + jnp.arange(S)
         out = _sdpa(q, k, v, scale=1.0 / math.sqrt(hd),
                     qpos=qpos, kpos=jnp.arange(T), causal=True,
                     window=cfg.sliding_window,
@@ -388,10 +402,16 @@ def mla_attention(p: Params, cfg: MLAConfig, x: jax.Array, *,
     new_cache = None
     if cache is not None:
         cc, rc = cache
-        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
-                                          (0, pos, 0))
-        rc = jax.lax.dynamic_update_slice(rc, k_rope.astype(rc.dtype),
-                                          (0, pos, 0, 0))
+        if jnp.ndim(pos) == 0:
+            cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                              (0, pos, 0))
+            rc = jax.lax.dynamic_update_slice(rc, k_rope.astype(rc.dtype),
+                                              (0, pos, 0, 0))
+        else:  # per-row slot positions (continuous batching)
+            assert S == 1, "vector pos is a single-token decode path"
+            rows = jnp.arange(B)
+            cc = cc.at[rows, pos].set(c_kv[:, 0].astype(cc.dtype))
+            rc = rc.at[rows, pos].set(k_rope[:, 0].astype(rc.dtype))
         c_kv, k_rope = cc, rc
         new_cache = (cc, rc)
 
@@ -403,8 +423,10 @@ def mla_attention(p: Params, cfg: MLAConfig, x: jax.Array, *,
 
     T = k.shape[1]
     offset = pos if pos is not None else 0
+    qpos = offset[:, None] + jnp.arange(S) if jnp.ndim(offset) == 1 \
+        else offset + jnp.arange(S)
     out = _sdpa(qf, k, v, scale=1.0 / math.sqrt(nd + rd),
-                qpos=offset + jnp.arange(S), kpos=jnp.arange(T), causal=True)
+                qpos=qpos, kpos=jnp.arange(T), causal=True)
     return linear(p["o_proj"], out.reshape(B, S, H * vd)), new_cache
 
 

@@ -365,6 +365,39 @@ def _layer_cache(cfg, cache, sel):
     return (cache["k"][sel], cache["v"][sel])
 
 
+def _cache_scan(cfg: ArchConfig, params: Params, x: jax.Array, cache, *,
+                pos, positions, remat: bool = False):
+    """Scan the blocks threading the decode cache: shared by prefill
+    (pos=0), chunked prefill (scalar pos offset) and decode (scalar pos, or
+    a (B,) vector of per-slot positions for continuous batching)."""
+    rope_cs = _rope_for(cfg, positions)
+    flags = _window_flags(cfg)
+
+    def body(h, scanned):
+        bp, c_l = scanned[0], scanned[1]
+        wf = scanned[2] if flags is not None else None
+        ssm_state = (c_l.pop("conv"), c_l.pop("ssm_h")) \
+            if cfg.family == "hybrid" else None
+        kv = tuple(c_l.values())
+        h, new_kv, new_ssm = _block_apply(
+            cfg, bp, h, rope_cs=rope_cs, window_enabled=wf,
+            cache=kv, ssm_state=ssm_state, pos=pos)
+        out = dict(zip(c_l.keys(), new_kv))
+        if new_ssm is not None:
+            out["conv"], out["ssm_h"] = new_ssm
+        return h, out
+    if remat:
+        body = jax.checkpoint(body)
+    keys = (["ckv", "krope"] if cfg.attn_kind == "mla" else ["k", "v"])
+    cdict = {k: cache[k] for k in keys}
+    if cfg.family == "hybrid":
+        cdict["conv"], cdict["ssm_h"] = cache["conv"], cache["ssm_h"]
+    xs = (params["blocks"], cdict) + \
+        ((flags,) if flags is not None else ())
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, {**cache, **new_cache}
+
+
 def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
             max_len: int, *, patches: Optional[jax.Array] = None,
             frames: Optional[jax.Array] = None, cache_dtype=jnp.bfloat16):
@@ -386,33 +419,32 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
     if cfg.family == "ssm":
         x, cache = _xlstm_serve(cfg, params, x, cache)
     else:
-        positions = jnp.arange(S)
-        rope_cs = _rope_for(cfg, positions)
-        flags = _window_flags(cfg)
+        x, cache = _cache_scan(cfg, params, x, cache, pos=0,
+                               positions=jnp.arange(S), remat=cfg.remat)
 
-        def body(h, scanned):
-            bp, c_l = scanned[0], scanned[1]
-            wf = scanned[2] if flags is not None else None
-            ssm_state = (c_l.pop("conv"), c_l.pop("ssm_h")) \
-                if cfg.family == "hybrid" else None
-            kv = (tuple(c_l.values()))
-            h, new_kv, new_ssm = _block_apply(
-                cfg, bp, h, rope_cs=rope_cs, window_enabled=wf,
-                cache=kv, ssm_state=ssm_state, pos=0)
-            out = dict(zip(c_l.keys(), new_kv))
-            if new_ssm is not None:
-                out["conv"], out["ssm_h"] = new_ssm
-            return h, out
-        if cfg.remat:
-            body = jax.checkpoint(body)
-        keys = (["ckv", "krope"] if cfg.attn_kind == "mla" else ["k", "v"])
-        cdict = {k: cache[k] for k in keys}
-        if cfg.family == "hybrid":
-            cdict["conv"], cdict["ssm_h"] = cache["conv"], cache["ssm_h"]
-        xs = (params["blocks"], cdict) + \
-            ((flags,) if flags is not None else ())
-        x, new_cache = jax.lax.scan(body, x, xs)
-        cache = {**cache, **new_cache}
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    return layers.unembed(head, x)[:, 0], cache
+
+
+def prefill_chunk(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  cache, pos: jax.Array):
+    """Continue a prefill: write a prompt chunk at positions
+    [pos, pos + S) of an existing cache (chunked prefill for prompts too
+    long to process in one shot — the long_500k serving path).  Token-only:
+    frontend archs prepend their prefix in the first full prefill instead.
+    Returns (chunk-final logits, cache)."""
+    assert cfg.frontend is None, "chunked prefill is token-only"
+    x = layers.embed(params["embed"], tokens).astype(
+        jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+
+    if cfg.family == "ssm":
+        x, cache = _xlstm_serve(cfg, params, x, cache)
+    else:
+        x, cache = _cache_scan(cfg, params, x, cache, pos=pos,
+                               positions=pos + jnp.arange(S),
+                               remat=cfg.remat)
 
     x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
@@ -421,39 +453,18 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 def decode_step(cfg: ArchConfig, params: Params, token: jax.Array,
                 cache, pos: jax.Array):
-    """One decode step: (B,) token ids + cache + scalar pos -> (logits, cache)."""
+    """One decode step: (B,) token ids + cache + pos -> (logits, cache).
+    pos is a scalar (all rows at the same depth) or a (B,) vector of
+    per-row positions (slot-based continuous batching)."""
     x = layers.embed(params["embed"], token[:, None]).astype(
         jnp.dtype(cfg.compute_dtype))
 
     if cfg.family == "ssm":
         x, cache = _xlstm_serve(cfg, params, x, cache)
     else:
-        import jax.numpy as _jnp
-        positions = pos[None] if pos.ndim == 0 else pos
-        rope_cs = _rope_for(cfg, positions)
-        flags = _window_flags(cfg)
-
-        def body(h, scanned):
-            bp, c_l = scanned[0], scanned[1]
-            wf = scanned[2] if flags is not None else None
-            ssm_state = (c_l.pop("conv"), c_l.pop("ssm_h")) \
-                if cfg.family == "hybrid" else None
-            kv = tuple(c_l.values())
-            h, new_kv, new_ssm = _block_apply(
-                cfg, bp, h, rope_cs=rope_cs, window_enabled=wf,
-                cache=kv, ssm_state=ssm_state, pos=pos)
-            out = dict(zip(c_l.keys(), new_kv))
-            if new_ssm is not None:
-                out["conv"], out["ssm_h"] = new_ssm
-            return h, out
-        keys = (["ckv", "krope"] if cfg.attn_kind == "mla" else ["k", "v"])
-        cdict = {k: cache[k] for k in keys}
-        if cfg.family == "hybrid":
-            cdict["conv"], cdict["ssm_h"] = cache["conv"], cache["ssm_h"]
-        xs = (params["blocks"], cdict) + \
-            ((flags,) if flags is not None else ())
-        x, new_cache = jax.lax.scan(body, x, xs)
-        cache = {**cache, **new_cache}
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
+        x, cache = _cache_scan(cfg, params, x, cache, pos=pos,
+                               positions=positions)
 
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])

@@ -1,0 +1,27 @@
+"""Continuous-batching serving tier.
+
+Layered on the functional prefill/decode factories in ``train/serve.py``:
+``RequestQueue`` models the arriving workload, ``SlotManager`` maps live
+requests onto a fixed decode batch (insert / evict / recycle cache rows),
+``Scheduler`` interleaves prefill with batched vector-position decode, and
+``ServeMetrics`` folds the event stream into TTFT / throughput numbers.
+``run_oneshot`` is the static-batch baseline the benchmarks compare
+against.  See docs/DESIGN.md §10.
+"""
+
+from repro.serve.metrics import RequestRecord, ServeMetrics
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.scheduler import Scheduler, ServeConfig, run_oneshot
+from repro.serve.slots import Slot, SlotManager
+
+__all__ = [
+    "Request",
+    "RequestQueue",
+    "RequestRecord",
+    "Scheduler",
+    "ServeConfig",
+    "ServeMetrics",
+    "Slot",
+    "SlotManager",
+    "run_oneshot",
+]

@@ -1,0 +1,271 @@
+"""Continuous-batching scheduler: interleaved prefill + batched decode.
+
+The loop (MaxText ``offline_inference`` style, adapted to this repo's
+functional prefill/decode factories in ``train/serve.py``):
+
+    poll queue -> prefill waiting requests into free slots -> one batched
+    decode step over ALL slots (per-slot positions) -> sample / advance /
+    evict finished -> repeat
+
+Prefill policy: ready requests with the *same* prompt length pack into one
+batched prefill call (up to ``prefill_pack``); prompts longer than
+``chunk_len`` stream through ``prefill_chunk_fn`` in ``chunk_len``-token
+pieces (the long_500k path) and occupy the prefill lane alone.  Decode
+runs at the fixed slot batch with the vector-``pos`` decode path, so every
+slot advances at its own depth — a slot's token stream is bit-identical to
+the same prompt decoded solo (tests/test_serve.py pins this).
+
+``run_oneshot`` is the pre-continuous-batching baseline (the old
+``examples/serve_decode.py`` loop): FIFO rounds of ``batch`` requests
+prefilled together and decoded in lockstep until the slowest request in
+the round finishes — the padding steps it wastes are exactly what slot
+recycling reclaims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_fns
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.slots import SlotManager
+from repro.train import serve as serve_fns
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-harness knobs (decode batch geometry + prefill policy)."""
+    num_slots: int = 8
+    max_len: int = 128            # per-slot cache rows (prefix+prompt+new)
+    prefill_pack: int = 4         # max equal-length prompts per prefill
+    chunk_len: Optional[int] = None   # chunked prefill above this length
+    cache_dtype: Any = jnp.bfloat16
+    enc_len: Optional[int] = None     # enc-dec: uniform encoder length
+    record_logits: bool = False       # keep per-token logits (parity tests)
+
+
+def _donate(*idx):
+    """Buffer donation helps on accelerators; CPU warns and ignores it."""
+    return idx if jax.default_backend() != "cpu" else ()
+
+
+class Scheduler:
+    """One model, one fixed decode batch, many requests."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig(), *,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.prefix = (cfg.frontend_len
+                       if cfg.frontend is not None and not cfg.encdec else 0)
+        self.slots = SlotManager(cfg, scfg.num_slots, scfg.max_len,
+                                 cache_dtype=scfg.cache_dtype,
+                                 enc_len=scfg.enc_len)
+        if mesh is not None:  # pin the slot cache to its serving layout
+            self.slots.cache = jax.device_put(
+                self.slots.cache,
+                serve_fns.cache_shardings(cfg, self.slots.cache, mesh))
+
+        dt = scfg.cache_dtype
+        if cfg.encdec:
+            self._prefill = jax.jit(lambda p, t, f: serve_fns.prefill_fn(
+                cfg, p, t, scfg.max_len, cache_dtype=dt, frames=f))
+        elif cfg.frontend == "patch":
+            self._prefill = jax.jit(lambda p, t, f: serve_fns.prefill_fn(
+                cfg, p, t, scfg.max_len, cache_dtype=dt, patches=f))
+        elif cfg.frontend == "frame":
+            self._prefill = jax.jit(lambda p, t, f: serve_fns.prefill_fn(
+                cfg, p, t, scfg.max_len, cache_dtype=dt, frames=f))
+        else:
+            self._prefill = jax.jit(lambda p, t: serve_fns.prefill_fn(
+                cfg, p, t, scfg.max_len, cache_dtype=dt))
+        m = model_fns(cfg)
+        if not cfg.encdec:
+            self._fresh_cache = jax.jit(
+                lambda: m.init_cache(cfg, 1, scfg.max_len, dt))
+            self._chunk = jax.jit(
+                lambda p, t, c, pos: serve_fns.prefill_chunk_fn(
+                    cfg, p, t, c, pos),
+                donate_argnums=_donate(2))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: serve_fns.decode_fn(cfg, p, t, c, pos),
+            donate_argnums=_donate(2))
+
+    # ------------------------------------------------------------- prefill
+
+    def _prefill_group(self, group: List[Request]):
+        """Batched prefill of equal-length prompts -> (logits, cache)."""
+        toks = jnp.asarray(np.stack([r.tokens for r in group]))
+        if self.cfg.encdec or self.cfg.frontend is not None:
+            frames = jnp.asarray(np.stack([r.frames for r in group]))
+            return self._prefill(self.params, toks, frames)
+        return self._prefill(self.params, toks)
+
+    def _prefill_chunked(self, req: Request):
+        """Stream one long prompt through the cache in chunk_len pieces."""
+        c = self.scfg.chunk_len
+        cache = self._fresh_cache()
+        toks = np.asarray(req.tokens)[None]
+        logits = None
+        for off in range(0, req.prompt_len, c):
+            logits, cache = self._chunk(
+                self.params, jnp.asarray(toks[:, off:off + c]), cache,
+                jnp.asarray(off, jnp.int32))
+        return logits, cache
+
+    def _admit(self, group: List[Request], metrics: ServeMetrics,
+               t0: float, chunked: bool) -> None:
+        if chunked:
+            logits, rcache = self._prefill_chunked(group[0])
+        else:
+            logits, rcache = self._prefill_group(group)
+        first = np.asarray(jnp.argmax(logits, -1), np.int32)
+        logits_np = (np.asarray(logits)
+                     if self.scfg.record_logits else None)
+        now = time.perf_counter() - t0
+        metrics.prefill_s.append(now)
+        for row, r in enumerate(group):
+            pos = r.prompt_len + self.prefix
+            i = self.slots.insert(r, rcache, row, int(first[row]), pos)
+            metrics.on_admit(r, now, int(first[row]),
+                             logits_np[row] if logits_np is not None
+                             else None)
+            if (r.max_new_tokens <= 1
+                    or (r.eos_id is not None and first[row] == r.eos_id)):
+                metrics.on_done(r.rid, now)
+                self.slots.evict(i)
+
+    # -------------------------------------------------------------- decode
+
+    def _decode_step(self, metrics: ServeMetrics, t0: float) -> None:
+        slots = self.slots
+        for i, s in slots.active():     # cache-exhausted: truncate
+            if slots.out_of_cache(i):
+                metrics.on_done(s.request.rid, time.perf_counter() - t0)
+                slots.evict(i)
+        n_active = slots.num_active
+        if n_active == 0:
+            return
+        t_start = time.perf_counter()
+        logits, slots.cache = self._decode(
+            self.params, jnp.asarray(slots.tok), slots.cache,
+            jnp.asarray(slots.pos))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)   # host sync
+        metrics.on_decode_step(time.perf_counter() - t_start, n_active)
+        logits_np = np.asarray(logits) if self.scfg.record_logits else None
+        now = time.perf_counter() - t0
+        for i, s in slots.active():
+            tok = int(nxt[i])
+            slots.advance(i, tok)
+            r = s.request
+            metrics.on_token(r.rid, tok,
+                             logits_np[i] if logits_np is not None else None)
+            if (s.generated >= r.max_new_tokens
+                    or (r.eos_id is not None and tok == r.eos_id)):
+                metrics.on_done(r.rid, now)
+                slots.evict(i)
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, queue: RequestQueue) -> ServeMetrics:
+        """Serve the queue to completion; returns the metrics sink."""
+        metrics = ServeMetrics(self.scfg.num_slots)
+        t0 = time.perf_counter()
+        while True:
+            now = time.perf_counter() - t0
+            queue.poll(now)
+            while self.slots.num_free > 0 and queue.num_ready > 0:
+                cap = min(self.slots.num_free, self.scfg.prefill_pack)
+                group = queue.pop_group(cap, self.scfg.chunk_len)
+                chunked = (self.scfg.chunk_len is not None
+                           and group[0].prompt_len > self.scfg.chunk_len)
+                self._admit(group, metrics, t0, chunked)
+            if self.slots.num_active == 0:
+                if queue.drained:
+                    break
+                nxt = queue.next_arrival()
+                if nxt is not None:   # idle until the next arrival
+                    time.sleep(min(max(nxt - (time.perf_counter() - t0),
+                                       0.0), 0.005))
+                continue
+            self._decode_step(metrics, t0)
+        metrics.wall_s = time.perf_counter() - t0
+        return metrics
+
+
+# ------------------------------------------------------- one-shot baseline
+
+@functools.lru_cache(maxsize=None)
+def _oneshot_fns(cfg, max_len: int, dt):
+    """jit closures for the baseline, cached so repeated runs (warmup,
+    then measurement) hit the same compiled executables."""
+    if cfg.encdec or cfg.frontend is not None:
+        key = "patches" if cfg.frontend == "patch" else "frames"
+        prefill = jax.jit(lambda p, t, f: serve_fns.prefill_fn(
+            cfg, p, t, max_len, cache_dtype=dt, **{key: f}))
+    else:
+        prefill = jax.jit(lambda p, t: serve_fns.prefill_fn(
+            cfg, p, t, max_len, cache_dtype=dt))
+    decode = jax.jit(lambda p, t, c, pos: serve_fns.decode_fn(
+        cfg, p, t, c, pos), donate_argnums=_donate(2))
+    return prefill, decode
+
+
+def run_oneshot(cfg, params, requests: List[Request], batch: int,
+                max_len: int, *, cache_dtype=jnp.bfloat16) -> ServeMetrics:
+    """Static-batch baseline: FIFO rounds of ``batch`` requests, each
+    prefilled together and decoded in lockstep for the round's largest
+    budget.  Requires a uniform prompt length (the old example's setting);
+    only requested tokens count toward throughput — the lockstep padding
+    is the waste continuous batching removes."""
+    lens = {r.prompt_len for r in requests}
+    if len(lens) != 1:
+        raise ValueError(f"one-shot baseline needs uniform prompts: {lens}")
+    prefix = cfg.frontend_len \
+        if cfg.frontend is not None and not cfg.encdec else 0
+    prefill, decode = _oneshot_fns(cfg, max_len, cache_dtype)
+
+    metrics = ServeMetrics(batch)
+    t0 = time.perf_counter()
+    for start in range(0, len(requests), batch):
+        rnd = requests[start:start + batch]
+        S = rnd[0].prompt_len
+        toks = jnp.asarray(np.stack([r.tokens for r in rnd]))
+        if cfg.encdec or cfg.frontend is not None:
+            frames = jnp.asarray(np.stack([r.frames for r in rnd]))
+            logits, cache = prefill(params, toks, frames)
+        else:
+            logits, cache = prefill(params, toks)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        first = np.asarray(tok)
+        now = time.perf_counter() - t0
+        for row, r in enumerate(rnd):
+            metrics.on_admit(r, now, int(first[row]))
+            if r.max_new_tokens <= 1:
+                metrics.on_done(r.rid, now)
+        steps = max(r.max_new_tokens for r in rnd) - 1
+        for i in range(steps):
+            t_start = time.perf_counter()
+            logits, cache = decode(params, tok, cache,
+                                   jnp.asarray(S + prefix + i, jnp.int32))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            nxt = np.asarray(tok)
+            live = [r for r in rnd if r.max_new_tokens > i + 1]
+            metrics.on_decode_step(time.perf_counter() - t_start, len(live))
+            now = time.perf_counter() - t0
+            for row, r in enumerate(rnd):
+                if r.max_new_tokens > i + 1:   # still within budget
+                    metrics.on_token(r.rid, int(nxt[row]))
+                    if r.max_new_tokens == i + 2:
+                        metrics.on_done(r.rid, now)
+    metrics.wall_s = time.perf_counter() - t0
+    return metrics

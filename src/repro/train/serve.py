@@ -17,6 +17,13 @@ from jax.sharding import NamedSharding
 
 from repro.models import model_fns, sharding as shard_rules
 
+# PartitionSpec's import home has moved across JAX releases; resolve the
+# canonical class once, here (same shim pattern as core/owner_comms.py's
+# shard_map and kernels/__init__.py's CompilerParams).
+PartitionSpec = getattr(jax.sharding, "PartitionSpec", None)
+if PartitionSpec is None:  # pragma: no cover — depends on the installed JAX
+    from jax.interpreters.pxla import PartitionSpec
+
 
 def prefill_fn(cfg, params, tokens, max_len: int, *,
                cache_dtype=jnp.bfloat16, **kwargs):
@@ -31,7 +38,20 @@ def prefill_fn(cfg, params, tokens, max_len: int, *,
                      cache_dtype=cache_dtype, **kwargs)
 
 
+def prefill_chunk_fn(cfg, params, tokens, cache, pos):
+    """Chunked-prefill continuation: write a prompt chunk at [pos, pos+S)
+    of an existing cache (serve tier, long-prompt path; token-only)."""
+    if cfg.encdec:
+        raise NotImplementedError(
+            "chunked prefill covers decoder-only families; enc-dec prompts "
+            "prefill in one shot")
+    m = model_fns(cfg)
+    return m.prefill_chunk(cfg, params, tokens, cache, pos)
+
+
 def decode_fn(cfg, params, token, cache, pos):
+    """One decode step; ``pos`` is a scalar, or a (B,) vector of per-slot
+    positions when driven by the continuous-batching scheduler."""
     m = model_fns(cfg)
     return m.decode_step(cfg, params, token, cache, pos)
 
@@ -50,5 +70,4 @@ def make_cache_shapes(cfg, batch: int, max_len: int,
 def cache_shardings(cfg, cache_shapes, mesh):
     specs = shard_rules.cache_specs(cfg, cache_shapes, mesh)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                        is_leaf=lambda x: hasattr(x, "_parsed_pspec")
-                        or type(x).__name__ == "PartitionSpec")
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))

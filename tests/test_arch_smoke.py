@@ -102,6 +102,38 @@ def test_prefill_decode_matches_forward(arch):
                                err_msg=f"{cfg.name}: decode != forward")
 
 
+def test_decode_vector_pos_matches_scalar(arch):
+    """decode_step with a (B,) position vector (continuous-batching slots)
+    is BITWISE identical to the scalar-pos path when all rows share the
+    position — the serving tier's per-slot decode rides this guarantee."""
+    cfg, m, params = arch
+    inp = _inputs(cfg, jax.random.PRNGKey(5))
+    tokens = inp.pop("tokens")
+    max_len = S + 4
+
+    prefix = 0
+    if cfg.encdec:
+        _, cache = m.prefill(cfg, params, tokens, frames=inp["frames"],
+                             max_len=max_len, cache_dtype=jnp.float32)
+    elif cfg.family == "ssm":
+        _, cache = m.prefill(cfg, params, tokens, max_len)
+    else:
+        prefix = cfg.frontend_len if cfg.frontend is not None else 0
+        _, cache = m.prefill(cfg, params, tokens, max_len + prefix,
+                             cache_dtype=jnp.float32, **inp)
+
+    nxt = jnp.full((B,), 7, jnp.int32)
+    d_s, cache_s = m.decode_step(cfg, params, nxt, cache,
+                                 jnp.asarray(S + prefix, jnp.int32))
+    d_v, cache_v = m.decode_step(cfg, params, nxt, cache,
+                                 jnp.full((B,), S + prefix, jnp.int32))
+    assert np.array_equal(np.asarray(d_s), np.asarray(d_v)), cfg.name
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cache_s),
+            jax.tree_util.tree_leaves_with_path(cache_v)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (cfg.name, path)
+
+
 def test_long_500k_eligibility_rule():
     eligible = {a for a in ARCHS
                 if cell_supported(configs.get(a, reduced=True),
