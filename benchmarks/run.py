@@ -25,7 +25,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (batching, breakdown, load_balance_bench,
-                            roofline_table, serve_bench, step_time)
+                            roofline_table, serve_bench, soak_bench,
+                            step_time)
     from benchmarks.common import record_to_csv, write_bench_json
     suites = {
         "step_time": step_time,              # Table 1 / Fig 8
@@ -34,6 +35,7 @@ def main() -> None:
         "load_balance": load_balance_bench,  # §3.4
         "roofline": roofline_table,          # §Roofline (from dry-run)
         "serve": serve_bench,                # continuous-batching tier
+        "soak": soak_bench,                  # fault-injected resilience drill
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suite", nargs="*",

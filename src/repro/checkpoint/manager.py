@@ -75,7 +75,9 @@ class CheckpointManager:
                 "dtype": str(np.asarray(arr).dtype),
                 "file": _leaf_file(path),
             }
-            host.append((path, np.asarray(arr)))
+            # explicit copy: device_get can be zero-copy on the CPU backend,
+            # and the async writer must not race a donated/overwritten buffer
+            host.append((path, np.array(arr, copy=True)))
         # structure for exact pytree round-trip (pickle: proto serialization
         # rejects user-defined nodes like the MuonState NamedTuple)
         import pickle
@@ -167,7 +169,11 @@ class CheckpointManager:
             elif path in like_map and hasattr(like_map[path], "sharding"):
                 leaves.append(jax.device_put(arr, like_map[path].sharding))
             else:
-                leaves.append(jax.numpy.asarray(arr))
+                dev = jax.numpy.asarray(arr)
+                # x64-disabled jax silently narrows int64/float64 (e.g. the
+                # data cursor); keep such leaves as host arrays so the
+                # round-trip stays bit-exact
+                leaves.append(arr if str(dev.dtype) != meta["dtype"] else dev)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -51,13 +51,22 @@ def _batch_at(cfg: DataConfig, step: int) -> dict:
 
 
 class Pipeline:
-    """Iterator with bounded background prefetch and device placement."""
+    """Iterator with bounded background prefetch and device placement.
+
+    Checkpointable iterator contract (fault tolerance): ``state()`` returns
+    the cursor of the next batch ``__next__`` will yield, as a pytree of
+    arrays that rides inside the checkpoint tree (checkpoint/manager.py);
+    ``restore(state)`` repositions the stream there, discarding prefetched
+    batches.  A resumed run therefore replays batches k, k+1, ... exactly —
+    the determinism the unfaulted-vs-restored bit-identity tests rely on.
+    """
 
     def __init__(self, cfg: DataConfig, mesh=None, start_step: int = 0,
                  prefetch: int = 2, sharding=None):
         self.cfg = cfg
         self.mesh = mesh
         self.sharding = sharding
+        self.prefetch = prefetch
         self._step = start_step
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -97,6 +106,31 @@ class Pipeline:
         except queue.Empty:
             pass
         self._thread.join(timeout=2)
+
+    # ----------------------------------------------------- checkpoint state
+
+    def state(self) -> dict:
+        """Checkpointable cursor: the step of the next batch ``__next__``
+        yields.  Prefetched-but-unconsumed batches are deliberately NOT part
+        of the state — they are regenerated on restore (purity of
+        ``_batch_at``), so the state is one integer however deep the queue.
+        """
+        return {"data_step": np.asarray(self._step, dtype=np.int64)}
+
+    def restore(self, state: dict) -> None:
+        """Reposition the stream at a cursor produced by ``state()`` (possibly
+        round-tripped through the checkpoint manager as a device array)."""
+        self.seek(int(np.asarray(state["data_step"])))
+
+    def seek(self, step: int) -> None:
+        """Repoint the stream at ``step``: stop the prefetch worker, drop the
+        queued batches, restart from the new cursor."""
+        self.close()
+        self._step = step
+        self._q = queue.Queue(maxsize=self.prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
 
 
 def batch_for_step(cfg: DataConfig, step: int, sharding=None) -> dict:

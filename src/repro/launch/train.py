@@ -1,33 +1,32 @@
-"""Production training driver (deliverable a/b): --arch × --shape × --opt.
+"""Production training driver on the resilient supervisor loop.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
-        --reduced --steps 50 --opt owner
+        --reduced --steps 50 --opt owner --ckpt-dir /tmp/ckpt
 
 On real hardware this launches against the production mesh; on this CPU
-container use --reduced for the smoke-scale config.  Wires together every
-substrate: config registry, dedication plan + MILP/greedy balancing,
-owner-centric DMuon, deterministic pipeline, checkpoint manager with
-rotation + async commit, straggler monitor.
+container use --reduced for the smoke-scale config.  The run is supervised
+by ``runtime/resilient.py``: streaming deterministic pipeline with a
+checkpointable cursor, rotating async checkpoints (train tree + data state),
+straggler monitoring with online re-dedication, and elastic recovery from
+owner loss / preemption.  ``--faults`` injects a scripted adversity drill
+(``runtime/faults.py`` DSL) — the same harness the soak test and
+``benchmarks/soak_bench.py`` drive.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro import configs
-from repro.checkpoint.manager import CheckpointManager
-from repro.core import api
 from repro.core.gram_ns import GramNSConfig
 from repro.core.muon import MuonConfig
-from repro.data.pipeline import DataConfig, Pipeline
-from repro.models import model_fns
-from repro.runtime.elastic import StepTimer, StragglerMonitor, remesh
-from repro.train.step import init_state, make_train_step
-from repro.train.train_state import TrainState
+from repro.data.pipeline import DataConfig
+from repro.runtime.elastic import remesh
+from repro.runtime.faults import FaultPlan
+from repro.runtime.resilient import ResilientConfig, ResilientLoop
 
 
 def main():
@@ -37,6 +36,8 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--opt", default="owner",
                     choices=["owner", "gather", "adamw"])
+    ap.add_argument("--variant", default="muon",
+                    help="optimizer variant (registry in core/api.py)")
     ap.add_argument("--strategy", default="load_balance",
                     choices=["load_balance", "greedy", "lpt", "round_robin",
                              "rank0", "xor"])
@@ -44,11 +45,23 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--pipeline", default="fused",
+                    choices=["fused", "bucketed"])
+    ap.add_argument("--owners", type=int, default=None,
+                    help="owner slots when running without a mesh "
+                         "(default: device count)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--mesh", action="store_true",
                     help="build a mesh over all visible devices")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault-injection drill, e.g. "
+                         "'slow@8:r3x4.0; kill@30:r1; readd@40; preempt@52'")
+    ap.add_argument("--no-rebalance", action="store_true",
+                    help="disable online straggler re-dedication")
+    ap.add_argument("--rebalance-window", type=int, default=20)
+    ap.add_argument("--rebalance-threshold", type=float, default=1.3)
     args = ap.parse_args()
 
     cfg = configs.get(args.arch, reduced=args.reduced)
@@ -57,47 +70,38 @@ def main():
                          "or extend the batch builder with frames/patches")
 
     mesh = remesh() if args.mesh and len(jax.devices()) > 1 else None
-    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
-                            jax.random.PRNGKey(0))
-    plan = api.dedicate_params(shapes, mesh=mesh, strategy=args.strategy)
-    opt = api.Muon(plan, mesh=mesh,
-                   config=MuonConfig(mode=args.opt, learning_rate=args.lr,
-                                     ns=GramNSConfig()))
-    print(f"[plan] {plan.stats}")
-
-    state = init_state(cfg, opt, jax.random.PRNGKey(0), mesh=mesh)
-    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
-    start = 0
-    if args.resume and mgr is not None and mgr.latest_step() is not None:
-        state = TrainState(**mgr.restore(like=state._asdict()))
-        start = int(state.step)
-        print(f"[resume] step {start}")
-
-    step = make_train_step(cfg, opt, mesh, accum_steps=args.accum,
-                           donate=False)
+    mcfg = MuonConfig(mode=args.opt, variant=args.variant,
+                      learning_rate=args.lr, pipeline=args.pipeline,
+                      ns=GramNSConfig())
+    rcfg = ResilientConfig(
+        steps=args.steps,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        strategy=args.strategy, accum_steps=args.accum,
+        rebalance=not args.no_rebalance, window=args.rebalance_window,
+        threshold=args.rebalance_threshold)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch)
-    pipe = Pipeline(dcfg, mesh=mesh, start_step=start)
-    monitor = StragglerMonitor(num_owners=plan.num_owners)
-    timer = StepTimer()
+    faults = FaultPlan.parse(args.faults) if args.faults else None
 
-    try:
-        for i in range(start, args.steps):
-            with timer:
-                state = step(state, next(pipe))
-                jax.block_until_ready(state.loss_ema)
-            if (i + 1) % 10 == 0:
-                print(f"step {i+1:5d} loss_ema {float(state.loss_ema):.4f} "
-                      f"{np.mean(timer.history[-10:])*1e3:.0f} ms/step",
-                      flush=True)
-            if mgr is not None and (i + 1) % args.ckpt_every == 0:
-                mgr.save(i + 1, state._asdict())
-    finally:
-        pipe.close()
-        if mgr is not None:
-            mgr.wait()
-    print(f"[done] steps={int(state.step)} loss_ema="
-          f"{float(state.loss_ema):.4f}")
+    loop = ResilientLoop(
+        cfg, dcfg, muon=mcfg, run=rcfg,
+        num_owners=args.owners or len(jax.devices()), mesh=mesh,
+        ckpt_dir=args.ckpt_dir, faults=faults, resume=args.resume,
+        log=lambda *a: print(*a, flush=True))
+    print(f"[plan] {loop.plan.stats}")
+    if args.resume and int(np.asarray(loop.state.step)):
+        print(f"[resume] step {int(np.asarray(loop.state.step))}")
+
+    report = loop.run()
+    if report.rebalances:
+        print(f"[rebalances] {len(report.rebalances)} "
+              f"(last speeds {np.round(report.rebalances[-1]['speed'], 3)})")
+    if report.recoveries:
+        print(f"[recoveries] "
+              f"{[(r['kind'], r['step']) for r in report.recoveries]}")
+    print(f"[done] steps={report.steps} owners={report.final_owner_count} "
+          f"loss_ema={float(loop.state.loss_ema):.4f} "
+          f"avg_step={np.mean(report.step_times)*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

@@ -22,14 +22,24 @@ two decisions that change on such an event:
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Deque, Optional, Sequence
 
 import numpy as np
 
 
 def viable_mesh_shape(n_devices: int, prefer_model: int = 16):
-    """Largest (data, model) grid for a (possibly degraded) device count."""
+    """Largest (data, model) grid for a (possibly degraded) device count.
+
+    Raises ``ValueError`` when no devices survive — the caller (supervisor
+    loop) must abort the job rather than divide by zero planning a mesh for
+    an empty cluster.
+    """
+    if n_devices < 1:
+        raise ValueError(
+            f"cannot build a mesh over {n_devices} devices; the job has no "
+            "survivors to remesh onto")
     model = min(prefer_model, n_devices)
     while n_devices % model:
         model -= 1
@@ -48,16 +58,27 @@ def remesh(devices: Optional[Sequence] = None, prefer_model: int = 16):
 
 @dataclass
 class StragglerMonitor:
-    """Detect persistent per-owner slowdowns and trigger rebalancing."""
+    """Detect persistent per-owner slowdowns and trigger rebalancing.
+
+    Memory is bounded by construction: ``_times`` is a deque capped at
+    ``window`` samples, so a months-long run holds ``window × num_owners``
+    floats however many steps it takes.
+    """
     num_owners: int
     window: int = 20
     threshold: float = 1.3          # relative slowdown triggering rebalance
-    _times: List[np.ndarray] = field(default_factory=list)
+    _times: Deque[np.ndarray] = field(default_factory=deque)
+
+    def __post_init__(self):
+        self._times = deque(self._times, maxlen=self.window)
 
     def record(self, per_owner_seconds: np.ndarray) -> None:
         self._times.append(np.asarray(per_owner_seconds, dtype=float))
-        if len(self._times) > self.window:
-            self._times.pop(0)
+
+    def reset(self) -> None:
+        """Drop history — after a rebalance/remesh the samples describe the
+        previous assignment and must not vote on the next one."""
+        self._times.clear()
 
     def speed_estimate(self) -> np.ndarray:
         """speed[r] ∈ (0, 1]: measured relative throughput per owner."""
@@ -83,11 +104,16 @@ class StragglerMonitor:
 
 class StepTimer:
     """Wall-clock per step; feeds the monitor on real deployments where
-    per-owner optimizer timings are exported by the profiler."""
+    per-owner optimizer timings are exported by the profiler.
 
-    def __init__(self):
+    ``history`` is bounded (default 1024 samples) so long-run supervisors
+    don't grow a float per step forever; ``recent(n)`` and ``last`` cover
+    the logging uses.
+    """
+
+    def __init__(self, max_history: int = 1024):
         self.t0 = None
-        self.history: List[float] = []
+        self.history: Deque[float] = deque(maxlen=max_history)
 
     def __enter__(self):
         self.t0 = time.perf_counter()
@@ -95,3 +121,13 @@ class StepTimer:
 
     def __exit__(self, *exc):
         self.history.append(time.perf_counter() - self.t0)
+
+    @property
+    def last(self) -> float:
+        return self.history[-1]
+
+    def recent(self, n: int) -> list:
+        """The most recent ``n`` samples (deques don't slice)."""
+        n = min(n, len(self.history))
+        return [self.history[i] for i in range(len(self.history) - n,
+                                               len(self.history))]

@@ -1,0 +1,212 @@
+"""Resilient-loop drills (ISSUE: survivable training loop).
+
+Quick tests: FaultPlan DSL round-trip + validation, the supervised loop's
+bit-equivalence to a manual train loop, and rebalance hysteresis (a
+persistent straggler triggers exactly one re-plan).
+
+Slow soak (marked ``slow``): a 60-step run per optimizer variant through the
+full drill — slow + recover, owner kill + re-add, preemption + checkpoint
+restore — asserting the *logical* optimizer trajectory (params, loss curve,
+unpacked momentum/variant-state rows) is bit-identical to an unfaulted run
+at equal step counts.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import api
+from repro.core.muon import MuonConfig, group_key_str
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.models import model_fns
+from repro.runtime.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.runtime.resilient import ResilientConfig, ResilientLoop
+from repro.train.step import init_state, make_train_step
+
+VARIANTS = ["muon", "muonbp", "normuon"]
+
+
+def _model_cfg():
+    return configs.get("smollm-360m", reduced=True, n_layers=2)
+
+
+def _data_cfg(cfg):
+    return DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+
+
+def _loop(variant="muon", *, steps, num_owners=4, ckpt_dir=None,
+          ckpt_every=0, faults=None, **run_kw):
+    cfg = _model_cfg()
+    run = ResilientConfig(steps=steps, ckpt_every=ckpt_every, **run_kw)
+    return ResilientLoop(cfg, _data_cfg(cfg), muon=MuonConfig(variant=variant),
+                         run=run, num_owners=num_owners, ckpt_dir=ckpt_dir,
+                         faults=faults)
+
+
+def _logical_rows(plan, bufs):
+    """Owner-major (D*cap, m, n) buffers -> logical (count, m, n) rows.
+    Owner-count independent: the basis of the bit-continuity assertions."""
+    out = {}
+    for key, g in plan.groups.items():
+        buf = np.asarray(bufs[group_key_str(key)])
+        out[group_key_str(key)] = buf[np.asarray(g.unpack_index)]
+    return out
+
+
+def _assert_same_trajectory(a, b):
+    """a, b: finished ResilientLoops at equal logical step counts."""
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        a.state.params, b.state.params)
+    assert a.report.loss_curve() == b.report.loss_curve()
+    ra = _logical_rows(a.plan, a.state.opt_state.momentum)
+    rb = _logical_rows(b.plan, b.state.opt_state.momentum)
+    assert ra.keys() == rb.keys()
+    for k in ra:
+        np.testing.assert_array_equal(ra[k], rb[k], err_msg=f"momentum {k}")
+    va, vb = a.state.opt_state.variant_state, b.state.opt_state.variant_state
+    assert (va is None) == (vb is None)
+    if va is not None:
+        assert va.keys() == vb.keys()
+        for field in va:
+            assert (va[field] is None) == (vb[field] is None)
+            if va[field] is None:
+                continue
+            fa = _logical_rows(a.plan, va[field])
+            fb = _logical_rows(b.plan, vb[field])
+            for k in fa:
+                np.testing.assert_array_equal(
+                    fa[k], fb[k], err_msg=f"variant_state {field}/{k}")
+
+
+# ------------------------------------------------------------ FaultPlan DSL
+
+
+def test_fault_plan_parse_roundtrip():
+    spec = "slow@8:r3x4.0; unslow@24:r3; kill@30:r1; readd@40; preempt@52"
+    plan = FaultPlan.parse(spec)
+    assert len(plan) == 5
+    assert plan.max_step == 52
+    assert FaultPlan.parse(plan.spec()).events == plan.events
+    assert plan.at(30) == [FaultEvent(step=30, kind="kill", owner=1)]
+    assert plan.at(8)[0].factor == 4.0
+    assert plan.at(7) == []
+
+
+@pytest.mark.parametrize("bad", [
+    "flood@3",             # unknown kind
+    "slow@3",              # slow needs an owner
+    "kill@3",              # kill needs an owner
+    "slow@3:r1x0.5",       # speedup is not a fault
+    "slow@-1:r0x2",        # negative step doesn't parse
+    "kill@3 r1",           # malformed clause
+])
+def test_fault_plan_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_injector_renumber_and_multipliers():
+    inj = FaultInjector(FaultPlan.parse("slow@0:r3x4.0; slow@0:r1x2.0"))
+    assert inj.events_at(0)                       # fires both slow events
+    np.testing.assert_allclose(inj.multipliers(4), [1, 2, 1, 4])
+    inj.on_owner_renumber(2)                      # slot 3 shifts down to 2
+    np.testing.assert_allclose(inj.multipliers(3), [1, 2, 4])
+    assert inj.events_at(0) == []                 # exactly-once
+
+
+# ------------------------------------------------- loop ≡ manual (unfaulted)
+
+
+def test_loop_matches_manual_train_loop():
+    """The supervisor adds zero numerics: a supervised run is bit-identical
+    to hand-stepping make_train_step over batch_for_step."""
+    steps = 5
+    loop = _loop(steps=steps, num_owners=2)
+    report = loop.run()
+    assert report.steps == steps
+    assert report.executed_steps == steps
+
+    cfg = _model_cfg()
+    shapes = jax.eval_shape(lambda k: model_fns(cfg).init(cfg, k),
+                            jax.random.PRNGKey(0))
+    plan = api.dedicate_params(shapes, num_owners=2, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig())
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step_fn = make_train_step(cfg, opt, donate=False)
+    dcfg = _data_cfg(cfg)
+    for i in range(steps):
+        state = step_fn(state, batch_for_step(dcfg, i))
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        loop.state.params, state.params)
+    assert float(loop.state.loss_ema) == float(state.loss_ema)
+
+
+# --------------------------------------------------------------- hysteresis
+
+
+def test_rebalance_fires_once_for_persistent_straggler():
+    """A 4x-slow owner trips the monitor once; after the re-plan the baked-in
+    speeds match the estimate, so hysteresis suppresses further re-fires."""
+    loop = _loop(steps=16, num_owners=4,
+                 faults=FaultPlan.parse("slow@1:r3x4.0"),
+                 window=4, cooldown=3, threshold=1.3)
+    report = loop.run()
+    assert len(report.rebalances) == 1
+    rb = report.rebalances[0]
+    assert rb["speed"][3] < 0.5                  # measured ~1/4 speed
+    assert rb["makespan_after_s"] < rb["makespan_before_s"]
+    assert report.steps == 16
+
+
+def test_rebalance_preserves_trajectory():
+    """The re-plan is scheduling metadata only: the rebalanced run stays
+    bit-identical to an unfaulted one."""
+    faulted = _loop(steps=12, num_owners=4,
+                    faults=FaultPlan.parse("slow@1:r3x4.0"),
+                    window=4, cooldown=3, threshold=1.3)
+    faulted.run()
+    assert faulted.report.rebalances
+    plain = _loop(steps=12, num_owners=4)
+    plain.run()
+    _assert_same_trajectory(faulted, plain)
+
+
+# --------------------------------------------------------------------- soak
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_soak_full_drill_bit_continuity(tmp_path, variant):
+    """60-step survivability drill per variant: slow+recover, kill+readd,
+    preempt+restore — logical trajectory bit-identical to an unfaulted run."""
+    drill = "slow@8:r3x4.0; unslow@24:r3; kill@30:r1; readd@40; preempt@52"
+    faulted = _loop(variant, steps=60, num_owners=4,
+                    ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=16,
+                    faults=FaultPlan.parse(drill),
+                    window=8, cooldown=10, threshold=1.3)
+    report = faulted.run()
+
+    assert report.steps == 60
+    assert report.final_owner_count == 4          # kill@30 then readd@40
+    # preempt@52 rewinds to the step-48 checkpoint: 4 replayed steps
+    assert report.executed_steps == 64
+    kinds = [r["kind"] for r in report.recoveries]
+    assert kinds.count("kill") == 1
+    assert kinds.count("readd") == 1
+    assert kinds.count("preempt") == 1
+    preempt = next(r for r in report.recoveries if r["kind"] == "preempt")
+    assert preempt["resumed_step"] == 48
+    assert report.rebalances, "slow@8 must trigger a re-plan"
+    rb = report.rebalances[0]
+    assert rb["makespan_after_s"] < rb["makespan_before_s"]
+    assert report.checkpoints and max(report.checkpoints) >= 48
+
+    plain = _loop(variant, steps=60, num_owners=4)
+    plain_report = plain.run()
+    assert plain_report.steps == 60
+    _assert_same_trajectory(faulted, plain)

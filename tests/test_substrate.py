@@ -15,7 +15,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import api
 from repro.core.muon import MuonConfig
 from repro.data.pipeline import DataConfig, Pipeline, batch_for_step
-from repro.runtime.elastic import StragglerMonitor, viable_mesh_shape
+from repro.runtime.elastic import StepTimer, StragglerMonitor, viable_mesh_shape
 from repro.train.step import init_state, make_train_step
 
 
@@ -90,6 +90,41 @@ def test_viable_mesh_shape():
     assert viable_mesh_shape(256) == (16, 16)
     assert viable_mesh_shape(512, prefer_model=16) == (32, 16)
     assert viable_mesh_shape(252, prefer_model=16) == (18, 14)
+    assert viable_mesh_shape(1) == (1, 1)
+
+
+def test_viable_mesh_shape_no_survivors_raises():
+    """Total device loss must abort planning, not divide by zero."""
+    with pytest.raises(ValueError):
+        viable_mesh_shape(0)
+    with pytest.raises(ValueError):
+        viable_mesh_shape(-4)
+
+
+def test_straggler_monitor_memory_bounded():
+    """A months-long run holds window x num_owners floats, not one per step."""
+    mon = StragglerMonitor(num_owners=2, window=5, threshold=1.2)
+    for i in range(50):
+        mon.record(np.array([1.0, 1.0 + i]))
+    assert len(mon._times) == 5
+    # estimate reflects only the window (latest samples), not all history
+    np.testing.assert_array_equal(mon._times[-1], [1.0, 50.0])
+    np.testing.assert_array_equal(mon._times[0], [1.0, 46.0])
+    mon.reset()
+    assert len(mon._times) == 0
+    assert not mon.should_rebalance()
+    np.testing.assert_array_equal(mon.speed_estimate(), np.ones(2))
+
+
+def test_step_timer_history_bounded():
+    timer = StepTimer(max_history=8)
+    for _ in range(30):
+        with timer:
+            pass
+    assert len(timer.history) == 8
+    assert timer.last == timer.history[-1]
+    assert timer.recent(3) == list(timer.history)[-3:]
+    assert len(timer.recent(100)) == 8      # clamped to available samples
 
 
 @pytest.mark.parametrize("mode", ["owner", "gather", "adamw"])
