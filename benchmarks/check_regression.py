@@ -34,6 +34,10 @@ REQUIRED_FIELDS = ("name", "config", "variant", "mode", "pipeline",
 # (median decode-step time alone doesn't capture a scheduler regression)
 SERVE_REQUIRED_FIELDS = ("ttft_ms", "tokens_per_sec")
 
+# paged-variant serve rows also carry the pool accounting (a paged run
+# that stops reporting occupancy/preemptions is a broken allocator)
+PAGED_REQUIRED_FIELDS = ("pool_blocks", "frag_pct", "preemptions")
+
 # measured rows of the soak suite carry the resilience latencies (step time
 # alone doesn't capture a slow recovery or re-plan path)
 SOAK_REQUIRED_FIELDS = ("recovery_ms", "rebalance_ms")
@@ -74,6 +78,16 @@ def load_and_validate(path: str) -> dict:
                 raise ValueError(
                     f"{path}: records[{i}] ({rec['name']}) has negative "
                     f"serving metrics")
+            if rec.get("variant") == "paged":
+                missing = [k for k in PAGED_REQUIRED_FIELDS if k not in rec]
+                if missing:
+                    raise ValueError(
+                        f"{path}: records[{i}] ({rec['name']}) is a paged "
+                        f"serve row missing fields {missing}")
+                if any(rec[k] < 0 for k in PAGED_REQUIRED_FIELDS):
+                    raise ValueError(
+                        f"{path}: records[{i}] ({rec['name']}) has "
+                        f"negative pool accounting")
         if doc.get("suite") == "soak" and rec["samples"] > 0:
             missing = [k for k in SOAK_REQUIRED_FIELDS if k not in rec]
             if missing:

@@ -35,6 +35,15 @@ def main():
                     help="continuous: synthetic workload size")
     ap.add_argument("--rate", type=float, default=None,
                     help="continuous: arrivals/sec (default: all at t=0)")
+    ap.add_argument("--kv", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="continuous: cache layout — contiguous per-slot "
+                         "rows, or the paged block pool (DESIGN.md §12)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per cache block")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged: pool size in blocks (default: same bytes "
+                         "as the contiguous reservation)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch, reduced=True)
@@ -79,15 +88,20 @@ def main():
         args.requests, cfg.vocab, prompt_lens=(S,),
         new_tokens=(2, args.new_tokens), rate=args.rate, seed=1, **enc_kw)
     scfg = ServeConfig(num_slots=args.batch, max_len=max_len,
-                       enc_len=S if cfg.encdec else None)
+                       enc_len=S if cfg.encdec else None,
+                       kv=args.kv, block_size=args.block_size,
+                       pool_blocks=args.pool_blocks)
     if cfg.frontend == "patch":
         raise SystemExit("continuous mode: patch-frontend archs need "
                          "per-request images; use --mode oneshot")
+    if cfg.encdec and args.kv == "paged":
+        raise SystemExit("paged KV covers decoder-only archs; enc-dec "
+                         "serves with --kv contiguous")
     sched = Scheduler(cfg, params, scfg)
     metrics = sched.run(queue)
     s = metrics.summary()
-    print(f"continuous: slots={args.batch} requests={s['requests']} "
-          f"(rate={args.rate or 'all-at-once'})")
+    print(f"continuous[{args.kv}]: slots={args.batch} "
+          f"requests={s['requests']} (rate={args.rate or 'all-at-once'})")
     print(f"  tokens            {s['tokens']}  in {s['wall_s']:.2f}s "
           f"(incl. compile)")
     print(f"  tokens/sec        {s['tokens_per_sec']:.1f}")
@@ -96,6 +110,12 @@ def main():
     print(f"  per-token ms      {s['per_token_ms_median']:.1f} median")
     print(f"  decode steps      {s['decode_steps']}  "
           f"(occupancy {s['slot_occupancy']:.2f})")
+    if args.kv == "paged":
+        print(f"  pool blocks       {s.get('pool_blocks', 0)}  "
+              f"(occupancy {s.get('pool_occupancy', 0.0):.2f}, "
+              f"frag {s.get('frag_pct', 0.0):.1f}%)")
+        print(f"  preemptions       {s['preemptions']}  "
+              f"rejected {s['rejected']}")
     rec = next(iter(metrics.requests.values()))
     print("sample token ids:", rec.tokens[:16])
 

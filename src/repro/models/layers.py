@@ -159,6 +159,36 @@ def _block_mask(qpos, kpos, *, causal, window, window_enabled):
     return ok
 
 
+def _paged_write(leaf, new, block_table, pos, block_size):
+    """Scatter new K/V rows into a paged pool leaf.
+
+    leaf: (P, bs, ...) physical block pool; new: (B, S, ...) freshly
+    projected rows.  Vector ``pos`` (decode, S == 1): row b writes at
+    physical block ``table[b, pos[b] // bs]`` offset ``pos[b] % bs``.
+    Scalar ``pos`` (chunked prefill, B == 1): the S chunk rows write at
+    logical positions pos + arange(S) through row 0's table.  Live block
+    tables are injective (paged.BlockPool), so scatter indices never
+    collide across slots; free slots idle on the reserved null block 0,
+    which no live table ever maps."""
+    if jnp.ndim(pos) == 0:
+        p = pos + jnp.arange(new.shape[1])
+        pb = block_table[0, p // block_size]
+        return leaf.at[pb, p % block_size].set(new[0].astype(leaf.dtype))
+    pb = jnp.take_along_axis(block_table, (pos // block_size)[:, None],
+                             axis=1)[:, 0]
+    return leaf.at[pb, pos % block_size].set(new[:, 0].astype(leaf.dtype))
+
+
+def _paged_read(leaf, block_table):
+    """Gather a slot-contiguous (B, W*bs, ...) sequence view from the
+    (P, bs, ...) pool: logical block j of row b is ``leaf[table[b, j]]``.
+    Entries past a slot's allocated length point at the null block; the
+    causal mask (kpos <= qpos) guarantees they are never attended."""
+    B, W = block_table.shape
+    g = leaf[block_table]                       # (B, W, bs, ...)
+    return g.reshape((B, W * leaf.shape[1]) + leaf.shape[2:])
+
+
 def _sdpa(q, k, v, *, scale, qpos=None, kpos=None, causal=False,
           window=None, window_enabled=None, q_one_block=False):
     """q: (B,S,H,hd); k,v: (B,T,KV,·); GQA by head-group repetition.
@@ -262,7 +292,8 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
               pos: Optional[jax.Array] = None,
               rope_cs: Optional[Tuple[jax.Array, jax.Array]] = None,
               window_enabled: Optional[jax.Array] = None,
-              static_cache: bool = False):
+              static_cache: bool = False,
+              block_table: Optional[jax.Array] = None):
     """Self (xk=None) or cross attention with optional KV cache.
 
     cache: (k_cache, v_cache) of (B, S_max, KV, hd); pos: write position —
@@ -272,6 +303,10 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
     (uniform-scan hybrid layers).  static_cache: use the cache as-is without
     recomputing/updating K,V (decode-time cross attention over precomputed
     encoder KV).
+    block_table: (B, W) int32 map of logical cache blocks to physical pool
+    blocks — the cache leaves are then (P, bs, KV, hd) pools shared by every
+    row, written through ``_paged_write`` and read back as a gathered
+    (B, W·bs, KV, hd) view (paged KV, docs/DESIGN.md §12).
     Returns (out, new_cache).
     """
     B, S, _ = x.shape
@@ -294,7 +329,16 @@ def attention(p: Params, cfg: AttnConfig, x: jax.Array, *,
         k = apply_rope(k, cos_k, sin_k)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        assert xk is None, "paged cache is a self-attention path"
+        kc, vc = cache                       # (P, bs, KV, hd) pools
+        bs = kc.shape[1]
+        kc = _paged_write(kc, k, block_table, pos, bs)
+        vc = _paged_write(vc, v, block_table, pos, bs)
+        new_cache = (kc, vc)
+        k = _paged_read(kc, block_table)
+        v = _paged_read(vc, block_table)
+    elif cache is not None:
         kc, vc = cache
         if xk is None:  # self-attn decode/prefill cache update
             if jnp.ndim(pos) == 0:
@@ -377,10 +421,12 @@ def mla_init(key, cfg: MLAConfig, dtype=jnp.float32) -> Params:
 def mla_attention(p: Params, cfg: MLAConfig, x: jax.Array, *,
                   cache: Optional[Tuple[jax.Array, jax.Array]] = None,
                   pos: Optional[jax.Array] = None,
-                  rope_cs=None):
+                  rope_cs=None,
+                  block_table: Optional[jax.Array] = None):
     """Multi-head Latent Attention.  Cache holds (c_kv, k_rope): the latent
     (B, S_max, kv_lora) plus shared rope key (B, S_max, 1, rope_dim) — the
-    memory saving that defines MLA."""
+    memory saving that defines MLA.  With ``block_table`` both leaves are
+    (P, bs, ...) pools indirected per row, same contract as attention()."""
     B, S, _ = x.shape
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -400,7 +446,15 @@ def mla_attention(p: Params, cfg: MLAConfig, x: jax.Array, *,
         k_rope = apply_rope(k_rope, cos_k, sin_k)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        cc, rc = cache                       # (P, bs, ...) pools
+        bs = cc.shape[1]
+        cc = _paged_write(cc, c_kv, block_table, pos, bs)
+        rc = _paged_write(rc, k_rope, block_table, pos, bs)
+        new_cache = (cc, rc)
+        c_kv = _paged_read(cc, block_table)
+        k_rope = _paged_read(rc, block_table)
+    elif cache is not None:
         cc, rc = cache
         if jnp.ndim(pos) == 0:
             cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),

@@ -188,18 +188,20 @@ def _pin_batch(cfg: ArchConfig, x: jax.Array) -> jax.Array:
 
 def _block_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
                  rope_cs, window_enabled=None, cache=None, ssm_state=None,
-                 pos=None):
+                 pos=None, block_table=None):
     """Residual block. Returns (x, new_cache, new_ssm_state)."""
     x = _pin_batch(cfg, x)
     h = layers.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
     new_cache = new_ssm = None
     if cfg.attn_kind == "mla":
         attn_out, new_cache = layers.mla_attention(
-            p["attn"], cfg.mla, h, cache=cache, pos=pos, rope_cs=rope_cs)
+            p["attn"], cfg.mla, h, cache=cache, pos=pos, rope_cs=rope_cs,
+            block_table=block_table)
     else:
         attn_out, new_cache = layers.attention(
             p["attn"], cfg.attn_cfg(), h, cache=cache, pos=pos,
-            rope_cs=rope_cs, window_enabled=window_enabled)
+            rope_cs=rope_cs, window_enabled=window_enabled,
+            block_table=block_table)
     if cfg.family == "hybrid":
         ssm_out, new_ssm = ssm_lib.ssm(p["ssm"], cfg.ssm, h, state=ssm_state)
         s = p["mix_scale"].astype(jnp.float32)
@@ -359,6 +361,49 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     return cache
 
 
+# cache leaves carrying a sequence axis — the ones the paged allocator
+# (serve/paged.py) stores block-granular; recurrent leaves (conv/ssm_h,
+# xLSTM memories) are O(1) per slot and always stay batch-contiguous
+PAGED_CACHE_KEYS = ("k", "v", "ckv", "krope")
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16):
+    """Decode cache whose attention leaves are block pools: (L, P, bs, ...)
+    physical blocks shared by every slot through per-request block tables
+    (serve/paged.py), instead of a contiguous (L, B, S_max, ...) row per
+    slot.  Block 0 is the reserved null block — free slots' idle writes
+    land there and no live table ever maps it, so callers size ``P`` as
+    ``pool_blocks + 1``.  Recurrent leaves keep the (L, batch, ...) layout
+    of init_cache.  Pure-recurrent families (ssm) have no sequence axis to
+    page; callers use init_cache unchanged for them."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        raise ValueError("ssm caches are O(1) recurrent state — nothing to "
+                         "page; use init_cache")
+    if cfg.sliding_window is not None and not cfg.global_layers:
+        # the contiguous tier shrinks these caches to a rolling window
+        # buffer (init_cache eff_len); paging a rolling buffer would remap
+        # physical blocks every window step — not supported
+        raise NotImplementedError(
+            "paged cache does not cover rolling sliding-window buffers")
+    cache: Dict[str, Any] = {}
+    if cfg.attn_kind == "mla":
+        cache["ckv"] = jnp.zeros((L, num_blocks, block_size,
+                                  cfg.mla.kv_lora_rank), dtype)
+        cache["krope"] = jnp.zeros((L, num_blocks, block_size, 1,
+                                    cfg.mla.qk_rope_dim), dtype)
+    else:
+        cache["k"] = jnp.zeros((L, num_blocks, block_size,
+                                cfg.n_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family == "hybrid":
+        conv, h = ssm_lib.ssm_init_state(cfg.ssm, batch)
+        cache["conv"] = jnp.broadcast_to(conv, (L,) + conv.shape).copy()
+        cache["ssm_h"] = jnp.broadcast_to(h, (L,) + h.shape).copy()
+    return cache
+
+
 def _layer_cache(cfg, cache, sel):
     if cfg.attn_kind == "mla":
         return (cache["ckv"][sel], cache["krope"][sel])
@@ -366,10 +411,12 @@ def _layer_cache(cfg, cache, sel):
 
 
 def _cache_scan(cfg: ArchConfig, params: Params, x: jax.Array, cache, *,
-                pos, positions, remat: bool = False):
+                pos, positions, remat: bool = False, block_tables=None):
     """Scan the blocks threading the decode cache: shared by prefill
     (pos=0), chunked prefill (scalar pos offset) and decode (scalar pos, or
-    a (B,) vector of per-slot positions for continuous batching)."""
+    a (B,) vector of per-slot positions for continuous batching).
+    ``block_tables`` (B, W) switches the attention leaves to the paged
+    (L, P, bs, ...) pool layout — one table shared by every layer."""
     rope_cs = _rope_for(cfg, positions)
     flags = _window_flags(cfg)
 
@@ -381,7 +428,8 @@ def _cache_scan(cfg: ArchConfig, params: Params, x: jax.Array, cache, *,
         kv = tuple(c_l.values())
         h, new_kv, new_ssm = _block_apply(
             cfg, bp, h, rope_cs=rope_cs, window_enabled=wf,
-            cache=kv, ssm_state=ssm_state, pos=pos)
+            cache=kv, ssm_state=ssm_state, pos=pos,
+            block_table=block_tables)
         out = dict(zip(c_l.keys(), new_kv))
         if new_ssm is not None:
             out["conv"], out["ssm_h"] = new_ssm
@@ -428,11 +476,13 @@ def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 
 def prefill_chunk(cfg: ArchConfig, params: Params, tokens: jax.Array,
-                  cache, pos: jax.Array):
+                  cache, pos: jax.Array, block_tables=None):
     """Continue a prefill: write a prompt chunk at positions
     [pos, pos + S) of an existing cache (chunked prefill for prompts too
     long to process in one shot — the long_500k serving path).  Token-only:
     frontend archs prepend their prefix in the first full prefill instead.
+    ``block_tables`` (1, W): chunk directly into a paged pool cache through
+    the request's block table (serve/paged.py admission path).
     Returns (chunk-final logits, cache)."""
     assert cfg.frontend is None, "chunked prefill is token-only"
     x = layers.embed(params["embed"], tokens).astype(
@@ -444,7 +494,7 @@ def prefill_chunk(cfg: ArchConfig, params: Params, tokens: jax.Array,
     else:
         x, cache = _cache_scan(cfg, params, x, cache, pos=pos,
                                positions=pos + jnp.arange(S),
-                               remat=cfg.remat)
+                               remat=cfg.remat, block_tables=block_tables)
 
     x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
@@ -452,10 +502,12 @@ def prefill_chunk(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 
 def decode_step(cfg: ArchConfig, params: Params, token: jax.Array,
-                cache, pos: jax.Array):
+                cache, pos: jax.Array, block_tables=None):
     """One decode step: (B,) token ids + cache + pos -> (logits, cache).
     pos is a scalar (all rows at the same depth) or a (B,) vector of
-    per-row positions (slot-based continuous batching)."""
+    per-row positions (slot-based continuous batching).  ``block_tables``
+    (B, W) reads/writes the attention cache through per-slot block tables
+    over a paged pool (serve/paged.py); recurrent state is unaffected."""
     x = layers.embed(params["embed"], token[:, None]).astype(
         jnp.dtype(cfg.compute_dtype))
 
@@ -464,7 +516,8 @@ def decode_step(cfg: ArchConfig, params: Params, token: jax.Array,
     else:
         positions = pos[None] if pos.ndim == 0 else pos[:, None]
         x, cache = _cache_scan(cfg, params, x, cache, pos=pos,
-                               positions=positions)
+                               positions=positions,
+                               block_tables=block_tables)
 
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])

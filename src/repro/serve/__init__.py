@@ -7,14 +7,28 @@ requests onto a fixed decode batch (insert / evict / recycle cache rows),
 ``ServeMetrics`` folds the event stream into TTFT / throughput numbers.
 ``run_oneshot`` is the static-batch baseline the benchmarks compare
 against.  See docs/DESIGN.md §10.
+
+``paged`` adds the block-granular KV allocator (``BlockPool`` /
+``BlockTable`` / ``PagedSlotManager``): attention caches become a shared
+pool of ``block_size``-token blocks mapped through per-request tables, so
+cache memory scales with live tokens instead of worst-case reservations —
+``ServeConfig(kv="paged")`` switches the scheduler over.  See
+docs/DESIGN.md §12.
 """
 
 from repro.serve.metrics import RequestRecord, ServeMetrics
+from repro.serve.paged import (BlockPool, BlockTable, PagedSlotManager,
+                               PoolExhausted, PreemptedSlot)
 from repro.serve.queue import Request, RequestQueue
 from repro.serve.scheduler import Scheduler, ServeConfig, run_oneshot
 from repro.serve.slots import Slot, SlotManager
 
 __all__ = [
+    "BlockPool",
+    "BlockTable",
+    "PagedSlotManager",
+    "PoolExhausted",
+    "PreemptedSlot",
     "Request",
     "RequestQueue",
     "RequestRecord",

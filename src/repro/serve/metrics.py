@@ -35,6 +35,8 @@ class RequestRecord:
     generated: int = 0
     tokens: Optional[List[int]] = None
     logits: Optional[List[np.ndarray]] = None   # parity capture (tests)
+    rejected: bool = False               # over-length, never admitted
+    preemptions: int = 0                 # paged pool preempt→resume cycles
 
     @property
     def ttft(self) -> float:
@@ -60,6 +62,10 @@ class ServeMetrics:
         self.active_per_step: List[int] = []
         self.decode_steps = 0
         self.wall_s = 0.0
+        self.preemptions = 0                     # fleet-level preempt count
+        # per-decode-step (reserved_tokens, used_tokens, pool_blocks,
+        # used_blocks) samples from SlotManager.pool_stats()
+        self.pool_samples: List[tuple] = []
 
     # -------------------------------------------------------------- events
 
@@ -85,10 +91,25 @@ class ServeMetrics:
     def on_done(self, rid: int, now: float) -> None:
         self.requests[rid].t_done = now
 
+    def on_reject(self, req, now: float) -> None:
+        """Over-length request turned away at admission: recorded as done
+        with the ``rejected`` marker, zero tokens, no TTFT."""
+        self.requests[req.rid] = RequestRecord(
+            rid=req.rid, arrival=req.arrival, prompt_len=req.prompt_len,
+            requested=req.max_new_tokens, t_done=now, rejected=True)
+
+    def on_preempt(self, rid: int, now: float) -> None:
+        self.requests[rid].preemptions += 1
+        self.preemptions += 1
+
     def on_decode_step(self, dt: float, n_active: int) -> None:
         self.decode_steps += 1
         self.decode_step_s.append(dt)
         self.active_per_step.append(n_active)
+
+    def on_pool_sample(self, reserved: int, used: int,
+                       pool_blocks: int, used_blocks: int) -> None:
+        self.pool_samples.append((reserved, used, pool_blocks, used_blocks))
 
     # ------------------------------------------------------------- summary
 
@@ -105,7 +126,7 @@ class ServeMetrics:
                if self.active_per_step else 0.0)
         toks = self.total_generated
         tps = toks / self.wall_s if self.wall_s > 0 else 0.0
-        return {
+        out = {
             "requests": len(self.requests),
             "tokens": toks,
             "wall_s": self.wall_s,
@@ -118,4 +139,27 @@ class ServeMetrics:
             "decode_step_us_p90": _p90(self.decode_step_s) * 1e6,
             "decode_steps": self.decode_steps,
             "slot_occupancy": occ,
+            "concurrent_mean": (float(np.mean(self.active_per_step))
+                                if self.active_per_step else 0.0),
+            "concurrent_peak": (int(max(self.active_per_step))
+                                if self.active_per_step else 0),
+            "rejected": sum(1 for r in self.requests.values() if r.rejected),
+            "preemptions": self.preemptions,
         }
+        if self.pool_samples:
+            reserved = np.asarray([s[0] for s in self.pool_samples], float)
+            used = np.asarray([s[1] for s in self.pool_samples], float)
+            pool_blocks = self.pool_samples[-1][2]
+            used_blocks = np.asarray([s[3] for s in self.pool_samples],
+                                     float)
+            # fragmentation: fraction of reserved cache tokens not holding
+            # a live token (block-internal waste for paged, whole idle-slot
+            # rows for contiguous)
+            nz = reserved > 0
+            out["frag_pct"] = (float(np.mean(
+                (reserved[nz] - used[nz]) / reserved[nz])) * 100.0
+                if nz.any() else 0.0)
+            out["pool_blocks"] = pool_blocks
+            out["pool_occupancy"] = (float(np.mean(used_blocks))
+                                     / pool_blocks if pool_blocks else 0.0)
+        return out

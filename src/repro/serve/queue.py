@@ -62,6 +62,11 @@ class RequestQueue:
         """Admit a request that is ready right now (tests / REPL use)."""
         self._ready.append(req)
 
+    def peek(self) -> Optional[Request]:
+        """Front ready request without popping it (the scheduler inspects
+        length/block needs before committing to admission)."""
+        return self._ready[0] if self._ready else None
+
     def next_arrival(self) -> Optional[float]:
         return self._pending[0].arrival if self._pending else None
 

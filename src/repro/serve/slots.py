@@ -37,6 +37,7 @@ class Slot:
     request: Request
     generated: int = 0          # tokens sampled so far (prefill's counts)
     tokens: Optional[List[int]] = None
+    seq: int = 0                # admission order (preemption picks youngest)
 
     def __post_init__(self):
         if self.tokens is None:
@@ -62,15 +63,8 @@ class SlotManager:
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
-        m = model_fns(cfg)
-        if cfg.encdec:
-            if enc_len is None:
-                raise ValueError("enc-dec slots need a uniform enc_len")
-            self.cache = m.init_cache(cfg, num_slots, max_len, enc_len,
-                                      cache_dtype)
-        else:
-            self.cache = m.init_cache(cfg, num_slots, max_len, cache_dtype)
         self.enc_len = enc_len
+        self.cache = self._alloc_cache(cache_dtype)
         # per-slot decode state, consumed directly by the vector-pos decode:
         # pos[i] is the next cache write position, tok[i] the last sampled
         # token.  Free slots idle at pos 0 — their writes land in a row that
@@ -79,6 +73,19 @@ class SlotManager:
         self.tok = np.zeros(num_slots, np.int32)
         self.slots: List[Optional[Slot]] = [None] * num_slots
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._seq = 0            # monotonic admission counter (Slot.seq)
+
+    def _alloc_cache(self, cache_dtype):
+        """Cache-layout hook: contiguous (L, B, S_max, ...) rows here;
+        paged.PagedSlotManager overrides with the block-pool layout."""
+        m = model_fns(self.cfg)
+        if self.cfg.encdec:
+            if self.enc_len is None:
+                raise ValueError("enc-dec slots need a uniform enc_len")
+            return m.init_cache(self.cfg, self.num_slots, self.max_len,
+                                self.enc_len, cache_dtype)
+        return m.init_cache(self.cfg, self.num_slots, self.max_len,
+                            cache_dtype)
 
     # ------------------------------------------------------------- queries
 
@@ -92,6 +99,15 @@ class SlotManager:
 
     def active(self) -> List[Tuple[int, Slot]]:
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def pool_stats(self) -> Tuple[int, int, int, int]:
+        """(reserved_tokens, used_tokens, pool_blocks, used_blocks) for the
+        occupancy/fragmentation metrics.  The contiguous tier reserves every
+        slot's full max_len row up front, whether occupied or not — that
+        worst-case reservation is exactly what paged.PagedSlotManager's
+        block-granular accounting shrinks."""
+        used = sum(int(self.pos[i]) for i, _ in self.active())
+        return self.num_slots * self.max_len, used, 0, 0
 
     # ----------------------------------------------------------- lifecycle
 
@@ -111,8 +127,9 @@ class SlotManager:
                                 jnp.asarray(row, jnp.int32))
         self.pos[i] = pos
         self.tok[i] = first_token
+        self._seq += 1
         self.slots[i] = Slot(request=req, generated=1,
-                             tokens=[int(first_token)])
+                             tokens=[int(first_token)], seq=self._seq)
         return i
 
     def evict(self, i: int) -> Slot:

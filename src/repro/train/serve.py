@@ -38,22 +38,32 @@ def prefill_fn(cfg, params, tokens, max_len: int, *,
                      cache_dtype=cache_dtype, **kwargs)
 
 
-def prefill_chunk_fn(cfg, params, tokens, cache, pos):
+def prefill_chunk_fn(cfg, params, tokens, cache, pos, block_tables=None):
     """Chunked-prefill continuation: write a prompt chunk at [pos, pos+S)
-    of an existing cache (serve tier, long-prompt path; token-only)."""
+    of an existing cache (serve tier, long-prompt path; token-only).
+    ``block_tables`` (1, W) writes the chunk straight into a paged pool
+    cache through the request's block table (serve/paged.py)."""
     if cfg.encdec:
         raise NotImplementedError(
             "chunked prefill covers decoder-only families; enc-dec prompts "
             "prefill in one shot")
     m = model_fns(cfg)
-    return m.prefill_chunk(cfg, params, tokens, cache, pos)
+    if block_tables is None:
+        return m.prefill_chunk(cfg, params, tokens, cache, pos)
+    return m.prefill_chunk(cfg, params, tokens, cache, pos,
+                           block_tables=block_tables)
 
 
-def decode_fn(cfg, params, token, cache, pos):
+def decode_fn(cfg, params, token, cache, pos, block_tables=None):
     """One decode step; ``pos`` is a scalar, or a (B,) vector of per-slot
-    positions when driven by the continuous-batching scheduler."""
+    positions when driven by the continuous-batching scheduler.  With
+    ``block_tables`` (B, W) the attention cache is the paged pool layout
+    (serve/paged.py) instead of contiguous per-slot rows."""
     m = model_fns(cfg)
-    return m.decode_step(cfg, params, token, cache, pos)
+    if block_tables is None:
+        return m.decode_step(cfg, params, token, cache, pos)
+    return m.decode_step(cfg, params, token, cache, pos,
+                         block_tables=block_tables)
 
 
 def make_cache_shapes(cfg, batch: int, max_len: int,

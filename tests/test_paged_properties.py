@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on the paged KV allocator's
+invariants: the BlockPool never double-frees, never leaks (free + live
+always equals the pool size), and the logical→physical mapping across all
+live block tables stays injective — no two tables, and no two entries of
+one table, share a physical block (refcount-shared blocks excepted, and
+the null block is never mapped).
+
+Pure host-side accounting (no jax arrays), so these run in milliseconds
+and can afford long random operation sequences.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.paged import (NULL_BLOCK, BlockPool, BlockTable,  # noqa: E402
+                               PoolExhausted)
+
+_SETTINGS = dict(max_examples=50, deadline=None)
+
+
+def _check_invariants(pool, tables):
+    # conservation: every block is exactly one of {free, live}
+    assert pool.num_free + pool.num_live == pool.num_blocks
+    # injectivity: no physical block mapped twice across live tables
+    # (no table here shares, so each live block has exactly one owner)
+    seen = set()
+    for t in tables:
+        for b in t.blocks:
+            assert b != NULL_BLOCK
+            assert 1 <= b <= pool.num_blocks
+            assert b not in seen, f"block {b} mapped twice"
+            seen.add(b)
+    assert len(seen) == pool.num_live
+
+
+@settings(**_SETTINGS)
+@given(
+    pool_size=st.integers(1, 32),
+    ops=st.lists(st.tuples(st.sampled_from(["grow", "release", "new"]),
+                           st.integers(0, 7), st.integers(1, 4)),
+                 min_size=1, max_size=60),
+)
+def test_pool_table_invariants_under_random_ops(pool_size, ops):
+    """Random grow/release/new sequences — with PoolExhausted and
+    table-overflow errors absorbed, exactly as the slot manager absorbs
+    them — keep conservation and injectivity intact."""
+    pool = BlockPool(pool_size)
+    max_blocks = max(pool_size // 2, 1)
+    tables = [BlockTable(pool, max_blocks)]
+    for op, idx, n in ops:
+        t = tables[idx % len(tables)]
+        if op == "grow":
+            before = t.num_blocks
+            try:
+                t.grow(n)
+            except PoolExhausted:
+                # failed grow must not leak partial allocations beyond
+                # what conservation accounts for
+                assert t.num_blocks >= before
+            except ValueError:
+                assert t.num_blocks + n > t.max_blocks
+        elif op == "release":
+            t.release()
+        else:
+            tables.append(BlockTable(pool, max_blocks))
+        _check_invariants(pool, tables)
+    for t in tables:
+        t.release()
+    assert pool.num_free == pool.num_blocks
+
+
+@settings(**_SETTINGS)
+@given(pool_size=st.integers(1, 16), seq=st.data())
+def test_no_double_free(pool_size, seq):
+    """Freeing a block the pool does not consider live always raises —
+    whether it was never allocated, already freed, or out of range."""
+    pool = BlockPool(pool_size)
+    held = [pool.alloc() for _ in range(
+        seq.draw(st.integers(0, pool_size)))]
+    freed = []
+    while held:
+        b = held.pop()
+        pool.free(b)
+        freed.append(b)
+    for b in freed:
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(b)
+    with pytest.raises(ValueError):
+        pool.free(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        pool.free(pool_size + 1)
+    assert pool.num_free == pool.num_blocks
+
+
+@settings(**_SETTINGS)
+@given(pool_size=st.integers(2, 16), extra=st.integers(1, 3))
+def test_refcount_sharing_delays_recycle(pool_size, extra):
+    """A share()d block survives its first free()s and returns to the
+    free list only when the last reference drops."""
+    pool = BlockPool(pool_size)
+    b = pool.alloc()
+    for _ in range(extra):
+        pool.share(b)
+    for _ in range(extra):
+        pool.free(b)
+        assert pool.num_free == pool_size - 1   # still live
+    pool.free(b)
+    assert pool.num_free == pool_size
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(b)
+
+
+def test_exhaustion_is_typed_and_recoverable():
+    pool = BlockPool(2)
+    a, b = pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.free(a)
+    assert pool.alloc() == a                    # LIFO recycle
+    with pytest.raises(ValueError, match="not live"):
+        pool.share(NULL_BLOCK)

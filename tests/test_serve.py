@@ -232,3 +232,184 @@ def test_encdec_slots_require_enc_len():
     cfg, _, _ = _build("seamless-m4t-large-v2")
     with pytest.raises(ValueError, match="enc_len"):
         SlotManager(cfg, 2, max_len=16)
+
+
+# ---------------------------------------------------------- paged serving
+
+from repro.serve import PagedSlotManager  # noqa: E402
+from repro.serve.paged import NULL_BLOCK  # noqa: E402
+
+# the three cache families of DESIGN.md §12: grouped-KV (smollm), MLA
+# latent (deepseek), pure-recurrent state (xlstm)
+PAGED_PARITY_ARCHS = ["smollm-360m", "deepseek-v3-671b", "xlstm-350m"]
+
+
+@pytest.fixture(scope="module", params=PAGED_PARITY_ARCHS)
+def served_paged(request):
+    """The slot-parity workload on the paged allocator, with the
+    ``preempt_every`` drill forcing preempt→requeue→resume cycles."""
+    cfg, m, params = _build(request.param)
+    queue = RequestQueue.synthetic(7, cfg.vocab, prompt_lens=(4, 8),
+                                   new_tokens=(2, 6), seed=3)
+    reqs = {r.rid: r for r in queue._pending}
+    scfg = ServeConfig(num_slots=3, max_len=32, prefill_pack=2,
+                       cache_dtype=jnp.float32, record_logits=True,
+                       kv="paged", block_size=8, preempt_every=4)
+    sched = Scheduler(cfg, params, scfg)
+    metrics = sched.run(queue)
+    return cfg, params, sched.max_len, metrics, reqs
+
+
+def test_paged_parity_bitwise(served_paged):
+    """Paged serving — block-scattered prefill, gather-indirected decode,
+    at least one preempt→resume cycle — is bit-identical to solo
+    contiguous decode, for KV, MLA and recurrent cache families."""
+    cfg, params, max_len, metrics, reqs = served_paged
+    assert metrics.preemptions >= 1     # the drill actually fired
+    assert len(metrics.requests) == 7
+    prefill = jax.jit(lambda p, t: serve_fns.prefill_fn(
+        cfg, p, t, max_len, cache_dtype=jnp.float32))
+    decode = jax.jit(lambda p, t, c, pos: serve_fns.decode_fn(
+        cfg, p, t, c, pos))
+    for rec in metrics.requests.values():
+        req = reqs[rec.rid]
+        logits, cache = prefill(params, jnp.asarray(req.tokens)[None])
+        ref = [np.asarray(logits[0])]
+        tok = int(np.argmax(ref[0]))
+        assert tok == rec.tokens[0], rec.rid
+        for i in range(1, rec.generated):
+            logits, cache = decode(
+                params, jnp.asarray([tok], jnp.int32), cache,
+                jnp.asarray(req.prompt_len + i - 1, jnp.int32))
+            ref.append(np.asarray(logits[0]))
+            tok = int(np.argmax(ref[-1]))
+            assert tok == rec.tokens[i], (rec.rid, i)
+        assert len(ref) == len(rec.logits), rec.rid
+        for i, (a, b) in enumerate(zip(ref, rec.logits)):
+            assert np.array_equal(a, b), \
+                f"rid {rec.rid} token {i}: paged logits != solo logits"
+
+
+def test_paged_requests_complete(served_paged):
+    cfg, params, max_len, metrics, _ = served_paged
+    for rec in metrics.requests.values():
+        assert rec.generated == rec.requested
+        assert not rec.rejected
+    s = metrics.summary()
+    assert s["preemptions"] >= 1
+    if cfg.family != "ssm":
+        assert s["pool_blocks"] > 0
+        assert 0.0 <= s["pool_occupancy"] <= 1.0
+
+
+def test_paged_pool_pressure_preempts():
+    """An under-provisioned pool (1.5 slots' worth of blocks for 4 slots)
+    forces organic preemption — no drill — and every request still
+    completes with its full budget."""
+    cfg, m, params = _build("smollm-360m")
+    queue = RequestQueue.synthetic(8, cfg.vocab, prompt_lens=(4, 8),
+                                   new_tokens=(8, 20), seed=5)
+    scfg = ServeConfig(num_slots=4, max_len=32, prefill_pack=2,
+                       cache_dtype=jnp.float32, kv="paged",
+                       block_size=8, pool_blocks=6)
+    metrics = Scheduler(cfg, params, scfg).run(queue)
+    assert metrics.preemptions >= 1
+    for rec in metrics.requests.values():
+        assert rec.generated == rec.requested
+
+
+@pytest.mark.parametrize("kv", ["contiguous", "paged"])
+def test_overlength_rejected_gracefully(kv):
+    """A prompt that alone fills the cache is rejected at admission —
+    recorded done with the ``rejected`` marker — instead of raising out
+    of SlotManager.insert; later fitting requests are unaffected."""
+    cfg, m, params = _build("smollm-360m")
+    q = RequestQueue()
+    q.push(_req(0, 40, budget=4))       # 40 >= max_len 32: over-length
+    q.push(_req(1, 8, budget=4))
+    scfg = ServeConfig(num_slots=2, max_len=32, cache_dtype=jnp.float32,
+                       kv=kv, block_size=8)
+    metrics = Scheduler(cfg, params, scfg).run(q)
+    r0, r1 = metrics.requests[0], metrics.requests[1]
+    assert r0.rejected and r0.generated == 0
+    assert r0.t_first is None and r0.t_done is not None
+    assert not r1.rejected and r1.generated == 4
+    assert metrics.summary()["rejected"] == 1
+
+
+def test_paged_beats_contiguous_concurrency_equal_memory():
+    """The headline: at equal cache bytes (12 blocks × 8 tokens), the paged
+    tier sustains strictly more concurrent requests than the contiguous
+    tier on a bimodal long+short workload, because short requests only
+    reserve the blocks they touch."""
+    cfg, m, params = _build("smollm-360m")
+
+    def wl():
+        return RequestQueue.synthetic(12, cfg.vocab, prompt_lens=(4,),
+                                      budgets=(4, 4, 4, 24), seed=11)
+    cont = Scheduler(cfg, params, ServeConfig(
+        num_slots=3, max_len=32, cache_dtype=jnp.float32)).run(wl())
+    paged = Scheduler(cfg, params, ServeConfig(
+        num_slots=6, max_len=32, cache_dtype=jnp.float32, kv="paged",
+        block_size=8, pool_blocks=12)).run(wl())
+    cs, ps = cont.summary(), paged.summary()
+    assert ps["tokens"] == cs["tokens"]
+    assert ps["concurrent_mean"] > cs["concurrent_mean"], (cs, ps)
+    assert ps["decode_steps"] < cs["decode_steps"], (cs, ps)
+    for rec in paged.requests.values():
+        assert rec.generated == rec.requested
+
+
+def test_paged_slot_units():
+    """PagedSlotManager lifecycle: block accounting across insert /
+    advance / evict, table release, null-block invariant."""
+    cfg, m, params = _build("smollm-360m")
+    sm = PagedSlotManager(cfg, 2, max_len=16, block_size=4,
+                          cache_dtype=jnp.float32)
+    assert sm.max_len == 16 and sm.blocks_per_slot == 4
+    assert sm.pool.num_blocks == 8 and sm.pool.num_free == 8
+    _, rcache = m.prefill(cfg, params, jnp.zeros((1, 4), jnp.int32), 16,
+                          cache_dtype=jnp.float32)
+    i = sm.insert(_req(0, 4), rcache, 0, first_token=1, pos=4)
+    assert sm.tables[i].num_blocks == 2          # covers positions 0..4
+    assert sm.pool.num_free == 6
+    assert NULL_BLOCK not in sm.tables[i].blocks
+    bt = sm.block_tables()
+    assert bt.shape == (2, 4)
+    assert (bt[1 - i] == NULL_BLOCK).all()       # free slot: all-null row
+    reserved, used, pool_blocks, used_blocks = sm.pool_stats()
+    assert (reserved, used, pool_blocks, used_blocks) == (8, 4, 8, 2)
+    sm.evict(i)
+    assert sm.pool.num_free == 8 and sm.tables[i] is None
+    # exhaustion: two full-length tables drain the pool
+    a = sm.insert(_req(1, 4), rcache, 0, first_token=1, pos=15)
+    b = sm.insert(_req(2, 4), rcache, 0, first_token=1, pos=11)
+    assert sm.pool.num_free == 1
+    sm.pos[b] = 15                               # next write needs a block
+    preempted = sm.prepare_decode()
+    assert [p.request.rid for p in preempted] == []   # 1 free block: fits
+    assert sm.pool.num_free == 0
+    assert sm.tables[a].num_blocks == 4 and sm.tables[b].num_blocks == 4
+
+
+def test_paged_prepare_decode_preempts_youngest():
+    cfg, m, params = _build("smollm-360m")
+    sm = PagedSlotManager(cfg, 2, max_len=16, block_size=4,
+                          pool_blocks=5, cache_dtype=jnp.float32)
+    _, rcache = m.prefill(cfg, params, jnp.zeros((1, 4), jnp.int32), 16,
+                          cache_dtype=jnp.float32)
+    a = sm.insert(_req(0, 4), rcache, 0, first_token=1, pos=7)   # 2 blocks
+    b = sm.insert(_req(1, 4), rcache, 0, first_token=1, pos=7)   # 2 blocks
+    sm.advance(a, 3)                             # pos 8: needs a 3rd block
+    sm.advance(b, 3)
+    preempted = sm.prepare_decode()
+    assert [p.request.rid for p in preempted] == [1]   # youngest evicted
+    assert sm.slots[b] is None and sm.num_active == 1
+    assert preempted[0].generated == 2 and preempted[0].tokens == [1, 3]
+    assert sm.tables[a].num_blocks == 3
+
+
+def test_paged_encdec_unsupported():
+    cfg, _, _ = _build("seamless-m4t-large-v2")
+    with pytest.raises(NotImplementedError):
+        PagedSlotManager(cfg, 2, max_len=16, enc_len=8)
