@@ -26,40 +26,53 @@ CENSUS = {(256, 1024): 32, (256, 256): 64, (128, 512): 96}
 RANKS = 16
 
 
-def _variant_records(variant: str) -> list[dict]:
-    """Orthogonalizer-phase cost of a registered variant on one owner stack:
+def _variant_records(variants) -> list[dict]:
+    """Orthogonalizer-phase cost of registered variants on one owner stack:
     the refresh step (full NS) vs the steady-state step (MuonBP's cached
-    reuse; identical to refresh for stateless variants).  Quantifies the
-    amortization each backend buys over the plain Gram path."""
+    reuse, Dion2's warm-basis path; identical to refresh for stateless
+    variants).  ``muon`` is always measured first as the baseline, and every
+    other variant's refresh row carries a ``vs_muon=`` ratio quantifying the
+    ortho-phase cost each backend saves (or pays) over the plain Gram path."""
     from repro.core import api
     from repro.core.muon import MuonConfig
     from repro.core.orthogonalize import make_orthogonalizer
     from repro.core.owner_comms import OwnerLayout, group_key_str
 
-    spec = api.get_variant(variant)
-    if spec.elementwise:
-        return []
+    ordered = ["muon"] + [v for v in dict.fromkeys(variants) if v != "muon"]
     x = jax.random.normal(jax.random.PRNGKey(2), (16, 128, 512)) * 0.02
     plan = api.dedicate_params({"w": x}, num_owners=1, strategy="greedy")
-    mcfg = MuonConfig(variant=variant)
-    layout = OwnerLayout(plan)
-    ortho = make_orthogonalizer(spec.orthogonalizer, mcfg)
-    state = ortho.init_state(layout, mcfg)
     stacks = {group_key_str("w"): x}
 
-    fn = jax.jit(lambda sts, step, st: ortho(
-        sts, step=step, state=st, layout=layout, cfg=mcfg))
-    recs = []
-    t_refresh = time_samples(fn, stacks, jnp.zeros((), jnp.int32), state)
-    recs.append(record("table2/variant/ortho_refresh", variant=variant,
-                       samples_s=t_refresh))
-    # steady state: advance past the refresh boundary (step % period != 0)
-    _, state1 = fn(stacks, jnp.zeros((), jnp.int32), state)
-    t_steady = time_samples(fn, stacks, jnp.ones((), jnp.int32), state1)
-    recs.append(record(
-        "table2/variant/ortho_steady", variant=variant, samples_s=t_steady,
-        derived=f"refresh/steady="
-                f"{min(t_refresh)/min(t_steady):.2f}x"))
+    recs: list[dict] = []
+    muon_refresh_s = None
+    for variant in ordered:
+        spec = api.get_variant(variant)
+        if spec.elementwise:
+            continue
+        mcfg = MuonConfig(variant=variant)
+        layout = OwnerLayout(plan)
+        ortho = make_orthogonalizer(spec.orthogonalizer, mcfg)
+        state = ortho.init_state(layout, mcfg)
+
+        fn = jax.jit(lambda sts, step, st, o=ortho, lo=layout, c=mcfg: o(
+            sts, step=step, state=st, layout=lo, cfg=c))
+        t_refresh = time_samples(fn, stacks, jnp.zeros((), jnp.int32), state)
+        derived = ""
+        if variant == "muon":
+            muon_refresh_s = min(t_refresh)
+        elif muon_refresh_s is not None:
+            derived = f"vs_muon={min(t_refresh) / muon_refresh_s:.2f}x"
+        recs.append(record("table2/variant/ortho_refresh", variant=variant,
+                           samples_s=t_refresh, derived=derived))
+        # steady state: advance past the refresh boundary (step % period
+        # != 0 for MuonBP; a warm — nonzero — basis for Dion2)
+        _, state1 = fn(stacks, jnp.zeros((), jnp.int32), state)
+        t_steady = time_samples(fn, stacks, jnp.ones((), jnp.int32), state1)
+        recs.append(record(
+            "table2/variant/ortho_steady", variant=variant,
+            samples_s=t_steady,
+            derived=f"refresh/steady="
+                    f"{min(t_refresh)/min(t_steady):.2f}x"))
     return recs
 
 
@@ -104,7 +117,10 @@ def _pipeline_records(variant: str, pipeline: str) -> list[dict]:
     return recs
 
 
-def run_records(variant: str = "muon",
+DEFAULT_VARIANTS = ("muon", "dion2", "adamuon")
+
+
+def run_records(variants=DEFAULT_VARIANTS,
                 pipeline: str = "bucketed") -> list[dict]:
     recs: list[dict] = []
     cfg = GramNSConfig(num_steps=5)
@@ -166,23 +182,28 @@ def run_records(variant: str = "muon",
                            unit="pct", derived="share_pct"))
 
     # ---- pluggable-variant orthogonalizer overhead + pipeline stages
-    recs.extend(_variant_records(variant))
-    recs.extend(_pipeline_records(variant, pipeline))
+    variants = tuple(variants)
+    recs.extend(_variant_records(variants))
+    for v in dict.fromkeys(variants):
+        recs.extend(_pipeline_records(v, pipeline))
     return recs
 
 
-def run(variant: str = "muon", pipeline: str = "bucketed") -> list[str]:
-    return [record_to_csv(r) for r in run_records(variant, pipeline)]
+def run(variants=DEFAULT_VARIANTS, pipeline: str = "bucketed") -> list[str]:
+    return [record_to_csv(r) for r in run_records(variants, pipeline)]
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--variant", default="muonbp",
-                    help="variant for the orthogonalizer-overhead rows")
+    ap.add_argument("--variant", action="append", default=None,
+                    help="variant for the orthogonalizer-overhead rows; "
+                         "repeatable (muon is always measured as baseline); "
+                         "default: %s" % (DEFAULT_VARIANTS,))
     ap.add_argument("--pipeline", default="bucketed",
                     choices=["fused", "bucketed"],
                     help="schedule for the pipeline-stage rows")
     args = ap.parse_args()
-    for r in run(variant=args.variant, pipeline=args.pipeline):
+    for r in run(variants=tuple(args.variant or DEFAULT_VARIANTS),
+                 pipeline=args.pipeline):
         print(r)

@@ -42,6 +42,12 @@ PAGED_REQUIRED_FIELDS = ("pool_blocks", "frag_pct", "preemptions")
 # alone doesn't capture a slow recovery or re-plan path)
 SOAK_REQUIRED_FIELDS = ("recovery_ms", "rebalance_ms")
 
+# breakdown variant rows must say which variant they measured, and every
+# non-muon refresh row must carry its vs_muon ratio — that ratio IS the
+# claim the committed baseline makes (e.g. dion2's ortho-cost reduction)
+BREAKDOWN_VARIANT_PREFIX = "table2/variant/"
+BREAKDOWN_BASELINE_VARIANT = "muon"
+
 
 def load_and_validate(path: str) -> dict:
     """Parse one BENCH_*.json and enforce the schema; raises ValueError."""
@@ -98,6 +104,20 @@ def load_and_validate(path: str) -> dict:
                 raise ValueError(
                     f"{path}: records[{i}] ({rec['name']}) has negative "
                     f"resilience latencies")
+        if (doc.get("suite") == "breakdown"
+                and rec["name"].startswith(BREAKDOWN_VARIANT_PREFIX)):
+            if not rec.get("variant"):
+                raise ValueError(
+                    f"{path}: records[{i}] ({rec['name']}) is a variant "
+                    f"breakdown row with an empty 'variant' field")
+            if (rec["name"] == BREAKDOWN_VARIANT_PREFIX + "ortho_refresh"
+                    and rec["samples"] > 0
+                    and rec["variant"] != BREAKDOWN_BASELINE_VARIANT
+                    and "vs_muon=" not in rec.get("derived", "")):
+                raise ValueError(
+                    f"{path}: records[{i}] ({rec['name']}, variant="
+                    f"{rec['variant']!r}) is a measured non-baseline "
+                    f"refresh row missing its vs_muon= derived ratio")
     return doc
 
 

@@ -23,10 +23,14 @@ orthogonalizer backend (core/orthogonalize.py) + its per-group state:
                normalization of the orthogonalized update
     muonbp   — MuonBP (arXiv:2510.16981): full NS refresh every
                ``muonbp_period`` steps, cached polar map in between
+    dion2    — Dion2 (arXiv:2512.16928): Gram NS on a warm-started rank-r
+               factor only (``dion2_rank_frac``), full update reconstructed
+    adamuon  — AdaMuon (arXiv:2507.11005): elementwise second-moment
+               adaptation of the orthogonalized update, norm-preserving
     adamw    — elementwise AdamW baseline
 
-``register_variant`` lets downstream scenarios (Dion2-style rank shrinking,
-AdaMuon, …) plug in new backends without touching the pipeline.
+``register_variant`` lets downstream scenarios plug in further backends
+without touching the pipeline.
 """
 
 from __future__ import annotations
@@ -80,6 +84,14 @@ register_variant(VariantSpec(
 register_variant(VariantSpec(
     "muonbp", orthogonalizer="block_periodic", stateful=True,
     description="Muon with block-periodic NS refresh (MuonBP)"))
+register_variant(VariantSpec(
+    "dion2", orthogonalizer="dion2", stateful=True,
+    description="Dion2: batched Gram NS on a warm-started rank-r factor "
+                "only (dion2_rank_frac), full update reconstructed"))
+register_variant(VariantSpec(
+    "adamuon", orthogonalizer="adamuon", stateful=True,
+    description="AdaMuon: elementwise second-moment adaptation of the "
+                "orthogonalized update, norm-preserving"))
 register_variant(VariantSpec(
     "adamw", orthogonalizer="none", elementwise=True,
     description="elementwise AdamW baseline (no matrix pipeline)"))
@@ -197,7 +209,14 @@ def reshard_owner_state(state, old_plan: DedicationPlan,
     def repack_buffer(skey_to_key, skey, buf):
         old_g = old_plan.groups[skey_to_key[skey]]
         new_g = new_plan.groups[skey_to_key[skey]]
-        assert old_g.count == new_g.count, (skey, old_g.count, new_g.count)
+        if old_g.count != new_g.count:
+            # A bare assert would vanish under `python -O` and let a
+            # mismatched repack silently scramble logical rows.
+            raise ValueError(
+                f"reshard_owner_state: group {skey!r} has {old_g.count} "
+                f"logical rows under the old plan but {new_g.count} under "
+                f"the new plan — the plans describe different parameter "
+                f"sets, not an owner-count change")
         packed = repack_rows(old_g, new_g, buf)
         shard = owner_sharding(new_plan, new_mesh, ndim=packed.ndim)
         if shard is not None:

@@ -22,9 +22,9 @@ Execution modes (``MuonConfig.mode``):
 * ``adamw``  — element-wise baseline for step-time comparisons.
 
 Variants (``MuonConfig.variant``; registry in ``core/api.py``): ``muon``,
-``normuon``, ``muonbp``, ``adamw`` — all sharing the owner-layout pipeline,
-differing only in the orthogonalizer backend (and its per-group state,
-threaded through ``MuonState.variant_state``).
+``normuon``, ``muonbp``, ``dion2``, ``adamuon``, ``adamw`` — all sharing the
+owner-layout pipeline, differing only in the orthogonalizer backend (and its
+per-group state, threaded through ``MuonState.variant_state``).
 
 Non-matrix parameters always take AdamW (Alg. 1 line 16).  All modes produce
 *identical* updates up to NS-iteration rounding for variant='muon' —
@@ -71,6 +71,8 @@ class MuonConfig:
     #   'muon'    — plain orthogonalized updates (the paper's optimizer)
     #   'normuon' — + neuron-wise second-moment normalization (NorMuon)
     #   'muonbp'  — block-periodic NS refresh every `muonbp_period` steps
+    #   'dion2'   — Gram NS on a warm-started rank-r factor only (Dion2)
+    #   'adamuon' — + elementwise second-moment adaptation (AdaMuon)
     #   'adamw'   — elementwise baseline (equivalent to mode='adamw')
     variant: str = "muon"
     # optimizer-step schedule for mode='owner' (core/pipeline.py):
@@ -102,6 +104,11 @@ class MuonConfig:
     normuon_beta2: float = 0.95          # NorMuon neuron second-moment decay
     normuon_eps: float = 1e-8
     muonbp_period: int = 4               # full-NS refresh period (1 = every step)
+    # Dion2: rank fraction r/m of the shrunken factor the Gram NS runs on
+    # (1.0 = full-rank; the update then matches plain muon up to rounding)
+    dion2_rank_frac: float = 0.25
+    adamuon_beta2: float = 0.95          # AdaMuon entry second-moment decay
+    adamuon_eps: float = 1e-8
 
 
 def _resolve(cfg: MuonConfig):

@@ -33,10 +33,23 @@ Backends:
                    one m×n GEMM instead of the whole iteration.  State: one
                    (D·cap, m, m) fp32 Q cache per group.  With period 1 every
                    step refreshes, which is bit-identical to ``gram``.
+  dion2          — Dion2-style rank shrinking (arXiv:2512.16928): keep a
+                   warm-started orthonormal rank-r basis Q per matrix, shrink
+                   the momentum to the r×n factor QᵀM, run the batched Gram
+                   NS on the factor only (Gram dimension r instead of m),
+                   and reconstruct the full update as Q·NS(QᵀM).  State: one
+                   (D·cap, m, r) fp32 factor basis per group.
+  adamuon        — AdaMuon (arXiv:2507.11005): wraps a base backend and adds
+                   elementwise second-moment adaptation of the orthogonalized
+                   update (bias-corrected, then rescaled to preserve each
+                   matrix's update norm — the magnitude the RMS-matching
+                   scale rule expects).  State: one (D·cap, m, n) fp32
+                   moment per group.
 
-``make_orthogonalizer(cfg)`` resolves a MuonConfig to a composed backend via
-the registry; the variant → backend mapping lives with the variant registry
-in ``core/api.py``.
+``make_orthogonalizer(name, cfg)`` resolves a backend name to a (possibly
+composed) backend; ``known_orthogonalizers()`` is the single source of truth
+for every name it accepts.  The variant → backend mapping lives with the
+variant registry in ``core/api.py``.
 """
 
 from __future__ import annotations
@@ -46,11 +59,13 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gram_ns import (GramNSConfig, gram_finish, gram_iterate,
                                 gram_newton_schulz, gram_prepare)
 from repro.core.newton_schulz import newton_schulz
 from repro.core.owner_comms import OwnerLayout, group_key_str
+from repro.core.update_rules import norm_preserving_rescale
 
 _EPS = 1e-7
 
@@ -180,10 +195,131 @@ class NeuronwiseNorm(Orthogonalizer):
             v = b2 * state["v"][k] + (1.0 - b2) * row_ms
             new_v[k] = layout.constrain_buffer(v)
             o_n = o32 / (jnp.sqrt(v / bc) + eps)[..., None]
-            norm = jnp.linalg.norm(o32, axis=(-2, -1), keepdims=True)
-            norm_n = jnp.linalg.norm(o_n, axis=(-2, -1), keepdims=True)
-            out[k] = (o_n * norm / (norm_n + _EPS)).astype(o.dtype)
+            out[k] = norm_preserving_rescale(o_n, o32).astype(o.dtype)
         return out, {"v": new_v, "inner": inner_state}
+
+
+class AdaptiveSecondMoment(Orthogonalizer):
+    """AdaMuon-style elementwise second-moment adaptation over a base backend.
+
+    After orthogonalization, every entry of the update is divided by the
+    bias-corrected RMS of its own history (second moment with decay
+    ``cfg.adamuon_beta2``), then the whole matrix is rescaled to its
+    pre-adaptation Frobenius norm — per-coordinate adaptivity without
+    disturbing the update magnitude the scale rule expects.  Structurally
+    the elementwise sibling of :class:`NeuronwiseNorm` (whose ``v`` is
+    per-row); all ops partition locally along the owner axis.
+    """
+
+    name = "adamuon"
+
+    def __init__(self, inner: Orthogonalizer):
+        self.inner = inner
+
+    def init_state(self, layout, cfg):
+        v = {group_key_str(k): layout.zeros(k, jnp.float32)
+             for k in layout.group_keys}
+        return {"v": v, "inner": self.inner.init_state(layout, cfg)}
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ortho, inner_state = self.inner(stacks, step=step,
+                                        state=state.get("inner"),
+                                        layout=layout, cfg=cfg)
+        b2 = cfg.adamuon_beta2
+        eps = cfg.adamuon_eps
+        bc = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+        new_v: Dict[str, jax.Array] = {}
+        out: Dict[str, jax.Array] = {}
+        for k, o in ortho.items():
+            o32 = o.astype(jnp.float32)
+            v = b2 * state["v"][k] + (1.0 - b2) * jnp.square(o32)
+            new_v[k] = layout.constrain_buffer(v)
+            o_n = o32 / (jnp.sqrt(v / bc) + eps)
+            out[k] = norm_preserving_rescale(o_n, o32).astype(o.dtype)
+        return out, {"v": new_v, "inner": inner_state}
+
+
+def dion2_rank(m: int, cfg) -> int:
+    """Factor rank r for a group with Gram dimension ``m`` under
+    ``cfg.dion2_rank_frac`` (validated here, the single entry point)."""
+    frac = float(cfg.dion2_rank_frac)
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(
+            f"dion2_rank_frac must be in (0, 1], got {frac}")
+    return max(1, min(m, int(round(frac * m))))
+
+
+class Dion2GramNS(Orthogonalizer):
+    """Dion2-style shrunken-factor orthogonalization (arXiv:2512.16928).
+
+    Instead of orthogonalizing the full m×n momentum, keep a persistent
+    orthonormal rank-r basis Q per matrix and orthogonalize only the r×n
+    factor:
+
+        Z = M (Mᵀ Q_prev)          warm-started subspace iteration
+        Q = qr(Z)                  re-orthonormalize the basis
+        U = Q · NS(Qᵀ M) · √(m/r)  Gram NS on the factor, reconstruct
+
+    The Gram recurrence runs at dimension r = ``dion2_rank``(m, cfg) instead
+    of m, cutting the iteration cost from O(m²n + k·m³) to
+    O(mnr + r²n + k·r³) — the algorithmic FLOP reduction that composes with
+    the systems-level owner pipeline.  The √(m/r) rescale restores the
+    Frobenius norm a fully orthogonalized update would have (‖NS(M)‖²_F = m,
+    ‖Q·NS(QᵀM)‖²_F = r), so the RMS-matching scale rule sees the magnitude
+    it expects.
+
+    A cold basis (all-zero rows: fresh init, or pad rows reset by an elastic
+    repack) falls back to the leading-r row selector — the literal "shrink to
+    a submatrix" step — and warms onto the top singular subspace of the
+    momentum from the next step on.  The update is invariant to the QR sign
+    convention (NS is an odd function: Q·NS(QᵀM) = (QS)·NS((QS)ᵀM) for any
+    diagonal sign matrix S), so determinism only requires a deterministic QR.
+
+    State: one (D·cap, m, r) fp32 basis per group, owner-sharded and
+    elastically resharded row-wise like every other owner buffer.
+    """
+
+    name = "dion2"
+
+    def init_state(self, layout, cfg):
+        q = {}
+        for k in layout.group_keys:
+            m = layout.plan.groups[k].key[0]
+            q[group_key_str(k)] = layout.zeros(
+                k, jnp.float32, trailing=(m, dion2_rank(m, cfg)))
+        return {"q": q}
+
+    def __call__(self, stacks, *, step, state, layout, cfg):
+        ns = cfg.ns
+
+        def run(args):
+            sts, qs = args["stacks"], args["q"]
+            out, new_q = {}, {}
+            for k, x in sts.items():
+                m = x.shape[-2]
+                r = qs[k].shape[-1]
+                x32 = x.astype(jnp.float32)
+                q_prev = qs[k]
+                # one warm-started subspace iteration toward the top-r left
+                # singular directions; O(mnr), never materializes the m×m Gram
+                z = jnp.einsum("...mn,...nr->...mr", x32,
+                               jnp.einsum("...mn,...mr->...nr", x32, q_prev))
+                cold = jnp.sum(jnp.square(q_prev), axis=(-2, -1),
+                               keepdims=True) == 0.0
+                z = jnp.where(cold, jnp.eye(m, r, dtype=jnp.float32), z)
+                q = jnp.linalg.qr(z)[0]
+                f = jnp.einsum("...mr,...mn->...rn", q, x32)
+                o = gram_newton_schulz(f.astype(x.dtype), cfg=ns,
+                                       assume_short_fat=True)
+                u = jnp.einsum("...mr,...rn->...mn", q,
+                               o.astype(jnp.float32))
+                out[k] = (u * float(np.sqrt(m / r))).astype(x.dtype)
+                new_q[k] = q
+            return out, new_q
+
+        out, new_q = layout.shard_local(run, {"stacks": stacks,
+                                              "q": state["q"]})
+        return out, {"q": new_q}
 
 
 class BlockPeriodicGramNS(Orthogonalizer):
@@ -251,22 +387,40 @@ ORTHOGONALIZERS = {
     "gram_fused": BucketFusedGramNS,
     "full_ns": FullMatrixNS,
     "block_periodic": BlockPeriodicGramNS,
+    "dion2": Dion2GramNS,
 }
+
+# wrappers composed over the base Gram path (plain or bucket-fused)
+COMPOSED_ORTHOGONALIZERS = {
+    "normuon": NeuronwiseNorm,
+    "adamuon": AdaptiveSecondMoment,
+}
+
+# names resolving to the base Gram dispatch itself
+BASE_ALIASES = ("auto", "gram_auto")
+
+
+def known_orthogonalizers() -> list:
+    """Every name ``make_orthogonalizer`` accepts — the single source of
+    truth for registries, error messages, and tests."""
+    return sorted(set(ORTHOGONALIZERS) | set(COMPOSED_ORTHOGONALIZERS)
+                  | set(BASE_ALIASES))
 
 
 def make_orthogonalizer(name: str, cfg) -> Orthogonalizer:
     """Build the backend for ``name``, honoring ``cfg.ns.bucket_fusion``.
 
-    ``"normuon"`` composes the neuron-wise normalizer over the base Gram
-    path; ``"auto"`` is the plain DMuon dispatch (fused when configured)."""
+    Composed names (``"normuon"``, ``"adamuon"``) wrap the base Gram path;
+    ``"auto"``/``"gram_auto"`` are the plain DMuon dispatch (fused when
+    configured)."""
     base = BucketFusedGramNS() if cfg.ns.bucket_fusion else GramNS()
-    if name in ("auto", "gram_auto"):
+    if name in BASE_ALIASES:
         return base
-    if name == "normuon":
-        return NeuronwiseNorm(base)
+    if name in COMPOSED_ORTHOGONALIZERS:
+        return COMPOSED_ORTHOGONALIZERS[name](base)
     try:
         return ORTHOGONALIZERS[name]()
     except KeyError:
         raise ValueError(
             f"unknown orthogonalizer {name!r}; "
-            f"known: {sorted(ORTHOGONALIZERS) + ['auto', 'normuon']}")
+            f"known: {known_orthogonalizers()}") from None

@@ -53,6 +53,20 @@ def momentum_update(mom: jax.Array, grad: jax.Array, cfg):
     return new_mom, eff
 
 
+def norm_preserving_rescale(normalized: jax.Array, reference: jax.Array,
+                            eps: float = 1e-7) -> jax.Array:
+    """Rescale each matrix in ``normalized`` back to the Frobenius norm of
+    its ``reference`` counterpart (leading dims are batch).
+
+    Adaptive variants (NorMuon's per-neuron, AdaMuon's per-entry second
+    moments) reshape the orthogonalized update but must not disturb the
+    update magnitude the RMS-matching scale rule expects — this is the shared
+    "equalize direction, preserve magnitude" epilogue."""
+    norm = jnp.linalg.norm(reference, axis=(-2, -1), keepdims=True)
+    norm_n = jnp.linalg.norm(normalized, axis=(-2, -1), keepdims=True)
+    return normalized * norm / (norm_n + eps)
+
+
 def apply_wd_and_lr(update: jax.Array, param: jax.Array, cfg) -> jax.Array:
     # fp32 update math when the master params are fp32; for bf16-master
     # configs (docs/DESIGN.md §8) stay in bf16 — the fp32 temp would be the

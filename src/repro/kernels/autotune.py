@@ -166,6 +166,16 @@ def _measure_wall(mode: str, bm: int, bk: int, m: int, k: int,
     return time.perf_counter() - t0
 
 
+def cached_entry(mode: str, m: int, k: int, dtype: str,
+                 cache_path: Optional[str] = None
+                 ) -> Optional[tuple[int, int]]:
+    """The cached winner for a shape, or None — never tunes or scores."""
+    cache_path = _DEFAULT_CACHE if cache_path is None else cache_path
+    with _lock:
+        _load(cache_path)
+        return _memory_cache.get(_key(mode, m, k, dtype))
+
+
 def lookup(mode: str, m: int, k: int, dtype: str,
            cache_path: Optional[str] = None) -> tuple[int, int]:
     """Cache hit or analytic tune — never measures (safe inside jit tracing)."""
@@ -203,13 +213,19 @@ def prewarm_plan(plan, *, dtypes=("float32",), backend: str = "analytical",
     Called at optimizer init (core/api.py): the paper's §3.3 workflow tunes
     once per (mode, shape, dtype) because "the same parameter shapes recur
     throughout training" — after this, ``lookup`` inside the jit'd step never
-    falls back to an un-cached tune.  Returns the number of cache entries
-    covered (hit or newly tuned).
+    falls back to an un-cached tune.  Shapes already in the cache are skipped
+    entirely (no re-tune, no re-score, no cache rewrite), so re-initializing
+    an optimizer over a warm plan — ``Muon.replace()``, elastic restarts —
+    costs nothing.  Returns the number of cache entries covered (hit or
+    newly tuned).
     """
     n = 0
     for dt in dtypes:
         for mode, m, k in plan_shapes(plan):
-            tune(mode, m, k, str(dt), backend=backend, cache_path=cache_path)
+            if cached_entry(mode, m, k, str(dt),
+                            cache_path=cache_path) is None:
+                tune(mode, m, k, str(dt), backend=backend,
+                     cache_path=cache_path)
             n += 1
     return n
 

@@ -89,6 +89,45 @@ def test_muon_init_prewarms(_isolated_cache):
         assert f"{mode}:{m}x{k}:float32" in cached
 
 
+def test_reinit_over_warm_cache_never_retunes(_isolated_cache, monkeypatch):
+    """Re-running init over an already-warm cache — ``Muon.replace()``,
+    repeated ``Muon(...)`` on elastic restarts — must skip every cached
+    (mode, m, k, dtype) entry: zero tune calls, while still reporting the
+    full covered-entry count."""
+    params = _params()
+    plan = api.dedicate_params(params, num_owners=2, strategy="greedy")
+    opt = api.Muon(plan, config=MuonConfig(mode="owner"))   # warms the cache
+
+    calls = []
+    real_tune = autotune.tune
+
+    def counting_tune(*args, **kw):
+        calls.append(args)
+        return real_tune(*args, **kw)
+
+    monkeypatch.setattr(autotune, "tune", counting_tune)
+    n = autotune.prewarm_plan(plan)
+    assert n == len(autotune.plan_shapes(plan))   # still reports coverage
+    assert calls == []                            # but never re-tunes
+    api.Muon(plan, config=MuonConfig(mode="owner"))
+    opt.replace(pipeline="bucketed")
+    opt.replace(variant="dion2")
+    assert calls == []
+
+
+def test_cached_entry_is_read_only(_isolated_cache):
+    """``cached_entry`` reports misses as None without tuning or writing."""
+    import os
+    assert autotune.cached_entry("syrk", 64, 256, "float32",
+                                 cache_path=_isolated_cache) is None
+    assert not os.path.exists(_isolated_cache)
+    autotune.tune("syrk", 64, 256, "float32", cache_path=_isolated_cache)
+    hit = autotune.cached_entry("syrk", 64, 256, "float32",
+                                cache_path=_isolated_cache)
+    assert hit == autotune.lookup("syrk", 64, 256, "float32",
+                                  cache_path=_isolated_cache)
+
+
 def test_prewarm_opt_out_and_elementwise_skip(_isolated_cache):
     import os
     params = _params()

@@ -146,9 +146,10 @@ def test_reshard_roundtrip_noncontiguous_pack_index():
 
 
 def test_reshard_carries_variant_state():
-    """NorMuon moments / MuonBP polar caches are owner-major buffers too and
-    must reshard row-exactly with the momentum."""
-    for variant in ("normuon", "muonbp"):
+    """NorMuon moments / MuonBP polar caches / Dion2 factor bases / AdaMuon
+    second moments are owner-major buffers too and must reshard row-exactly
+    with the momentum."""
+    for variant in ("normuon", "muonbp", "dion2", "adamuon"):
         params, plan4 = _stack_plan(4)
         _, plan2 = _stack_plan(2)
         opt4 = api.Muon(plan4, config=MuonConfig(variant=variant))
@@ -185,3 +186,20 @@ def test_reshard_carries_variant_state():
                 pads = np.delete(np.asarray(back.variant_state[field][skey]),
                                  g4.unpack_index, axis=0)
                 assert np.all(pads == 0)
+
+
+def test_reshard_group_count_mismatch_raises():
+    """Plans over different parameter sets must be rejected with a typed
+    error naming the offending group and both counts — a bare assert would
+    vanish under ``python -O`` and silently scramble rows."""
+    import pytest
+
+    params6, plan6 = _stack_plan(2)
+    params4 = {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 24))}
+    plan4mat = api.dedicate_params(params4, num_owners=2, strategy="greedy")
+    opt = api.Muon(plan6, config=MuonConfig())
+    st = opt.init(params6)
+    with pytest.raises(ValueError) as ei:
+        reshard_owner_state(st, plan6, plan4mat)
+    msg = str(ei.value)
+    assert "'w'" in msg and "6" in msg and "4" in msg

@@ -20,7 +20,7 @@ from repro.core.muon import MuonConfig
 from repro.core.owner_comms import group_key_str
 from repro.core.pipeline import BucketPipeline, reshard_staged
 
-VARIANTS = ["muon", "normuon", "muonbp", "adamw"]
+VARIANTS = ["muon", "normuon", "muonbp", "dion2", "adamuon", "adamw"]
 
 
 def _tree(seed=0):

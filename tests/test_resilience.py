@@ -176,6 +176,28 @@ def test_rebalance_preserves_trajectory():
     _assert_same_trajectory(faulted, plain)
 
 
+# ---------------------------------------- kill/readd drill (new variants)
+
+
+@pytest.mark.parametrize("variant", ["dion2", "adamuon"])
+def test_kill_readd_drill_new_variants(variant):
+    """Quick elasticity drill for the shrunken-factor / second-moment
+    variants: an owner kill + re-add mid-run must leave the logical
+    trajectory bit-identical to an unfaulted run — their owner-major
+    q/v buffers ride reshard_owner_state exactly like the momentum."""
+    faulted = _loop(variant, steps=14, num_owners=4,
+                    faults=FaultPlan.parse("kill@4:r1; readd@9"))
+    report = faulted.run()
+    assert report.steps == 14
+    assert report.final_owner_count == 4
+    kinds = [r["kind"] for r in report.recoveries]
+    assert kinds.count("kill") == 1 and kinds.count("readd") == 1
+
+    plain = _loop(variant, steps=14, num_owners=4)
+    plain.run()
+    _assert_same_trajectory(faulted, plain)
+
+
 # --------------------------------------------------------------------- soak
 
 

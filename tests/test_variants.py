@@ -1,6 +1,6 @@
-"""The pluggable variant registry: NorMuon, MuonBP, AdamW — all sharing the
-owner-layout pipeline, differing only in the orthogonalizer backend and its
-per-group state (threaded through MuonState.variant_state)."""
+"""The pluggable variant registry: NorMuon, MuonBP, Dion2, AdaMuon, AdamW —
+all sharing the owner-layout pipeline, differing only in the orthogonalizer
+backend and its per-group state (threaded through MuonState.variant_state)."""
 
 import jax
 import jax.numpy as jnp
@@ -50,14 +50,34 @@ def _run(opt, params, n=3):
 # ------------------------------------------------------------------ registry
 
 def test_registry_contents_and_errors():
-    assert set(api.VARIANTS) >= {"muon", "normuon", "muonbp", "adamw"}
+    assert set(api.VARIANTS) >= {"muon", "normuon", "muonbp", "dion2",
+                                 "adamuon", "adamw"}
     with pytest.raises(ValueError, match="unknown variant"):
-        api.get_variant("dion2")
+        api.get_variant("dion3")
     with pytest.raises(ValueError, match="already registered"):
         api.register_variant(api.VARIANTS["muon"])
     params, plan, _ = _mk("muon")
     with pytest.raises(ValueError, match="unknown variant"):
         api.Muon(plan, config=MuonConfig(variant="nope"))
+
+
+def test_known_orthogonalizers_single_source_of_truth():
+    """Every advertised backend name constructs, and the unknown-name error
+    lists exactly the advertised set (incl. the gram_auto alias and the
+    composed normuon/adamuon names the old hand-written list omitted)."""
+    from repro.core.orthogonalize import (Orthogonalizer,
+                                          known_orthogonalizers,
+                                          make_orthogonalizer)
+    cfg = MuonConfig()
+    names = known_orthogonalizers()
+    assert {"auto", "gram_auto", "normuon", "adamuon", "dion2",
+            "block_periodic"} <= set(names)
+    for name in names:
+        assert isinstance(make_orthogonalizer(name, cfg), Orthogonalizer)
+    with pytest.raises(ValueError) as ei:
+        make_orthogonalizer("definitely_not_a_backend", cfg)
+    for name in names:
+        assert name in str(ei.value)
 
 
 def test_gather_mode_rejects_variant_backends():
@@ -169,9 +189,127 @@ def test_variants_compose_with_bucket_fusion():
         assert np.isfinite(np.asarray(leaf)).all()
 
 
+# -------------------------------------------------------------------- dion2
+
+def test_dion2_state_shapes_and_rank():
+    from repro.core.orthogonalize import dion2_rank
+    params, plan, opt = _mk("dion2", dion2_rank_frac=0.25)
+    new_params, state = _run(opt, params, n=2)
+    q = state.variant_state["q"]
+    for key, grp in plan.groups.items():
+        skey = key.replace("/", ".")
+        m = grp.key[0]
+        r = dion2_rank(m, opt.config)
+        assert 1 <= r <= m
+        assert q[skey].shape == (grp.packed_size, m, r)
+        assert np.isfinite(np.asarray(q[skey])).all()
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_dion2_cold_start_is_leading_row_submatrix():
+    """A cold (all-zero) basis falls back to the leading-r row selector, so
+    the first update is exactly √(m/r)·NS(M[:r]) lifted back into rows 0..r
+    — the literal 'shrink the matrix' step."""
+    from repro.core.gram_ns import gram_newton_schulz
+    from repro.core.orthogonalize import Dion2GramNS
+    from repro.core.owner_comms import OwnerLayout, group_key_str
+    m, n, r = 16, 48, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, m, n)) * 0.02
+    plan = api.dedicate_params({"w": x}, num_owners=1, strategy="greedy")
+    cfg = MuonConfig(variant="dion2", dion2_rank_frac=r / m,
+                     ns=GramNSConfig(num_steps=5))
+    layout = OwnerLayout(plan)
+    ortho = Dion2GramNS()
+    state = ortho.init_state(layout, cfg)
+    skey = group_key_str("w")
+    assert np.all(np.asarray(state["q"][skey]) == 0)
+    out, state1 = ortho({skey: x}, step=jnp.zeros((), jnp.int32),
+                        state=state, layout=layout, cfg=cfg)
+    u = np.asarray(out[skey], np.float32)
+    np.testing.assert_allclose(u[:, r:, :], 0.0, atol=1e-6)
+    ref = np.asarray(gram_newton_schulz(x[:, :r, :], cfg=cfg.ns,
+                                        assume_short_fat=True))
+    np.testing.assert_allclose(u[:, :r, :], ref * np.sqrt(m / r),
+                               rtol=1e-4, atol=1e-5)
+    # the basis is warm now and moves off the axis-aligned selector
+    out2, state2 = ortho({skey: x}, step=jnp.ones((), jnp.int32),
+                         state=state1, layout=layout, cfg=cfg)
+    u2 = np.asarray(out2[skey], np.float32)
+    assert np.abs(u2[:, r:, :]).max() > 1e-5   # full rows participate now
+    assert np.abs(np.asarray(state2["q"][skey])
+                  - np.asarray(state1["q"][skey])).max() > 1e-6
+
+
+def test_dion2_full_rank_approximates_muon():
+    """r = m removes the shrinking, so dion2 must agree with plain muon up
+    to the basis rotation (NS on QᵀM vs M — same polar limit)."""
+    params_d, _, opt_d = _mk("dion2", dion2_rank_frac=1.0)
+    params_m, _, opt_m = _mk("muon")
+    g = _grads()
+    ud, _ = opt_d.update(g, opt_d.init(params_d), params_d)
+    um, _ = opt_m.update(g, opt_m.init(params_m), params_m)
+    for a, b in zip(jax.tree.leaves(ud), jax.tree.leaves(um)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert np.linalg.norm(a - b) < 1e-2 * np.linalg.norm(b) + 1e-8
+
+
+def test_dion2_rank_frac_validation():
+    from repro.core.orthogonalize import dion2_rank
+    params, _, opt = _mk("dion2", dion2_rank_frac=0.0)
+    with pytest.raises(ValueError, match="dion2_rank_frac"):
+        opt.init(params)
+    cfg = MuonConfig(dion2_rank_frac=0.25)
+    assert dion2_rank(32, cfg) == 8
+    assert dion2_rank(1, cfg) == 1          # floors at rank 1
+    assert dion2_rank(32, MuonConfig(dion2_rank_frac=1.0)) == 32
+
+
+# ------------------------------------------------------------------ adamuon
+
+def test_adamuon_state_shapes_and_pad_rows():
+    params, plan, opt = _mk("adamuon")
+    new_params, state = _run(opt, params)
+    v = state.variant_state["v"]
+    assert state.variant_state["inner"] is None   # base Gram is stateless
+    for key, grp in plan.groups.items():
+        skey = key.replace("/", ".")
+        m, n = grp.key
+        assert v[skey].shape == (grp.packed_size, m, n)
+        assert np.isfinite(np.asarray(v[skey])).all()
+        # pad rows never receive updates (gram NS of a zero matrix is zero)
+        if grp.packed_size > grp.count:
+            assert np.all(np.asarray(v[skey])[grp.count:] == 0)
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_adamuon_differs_from_muon_but_preserves_update_norm():
+    params_a, _, opt_a = _mk("adamuon")
+    params_m, _, opt_m = _mk("muon")
+    g = _grads()
+    ua, _ = opt_a.update(g, opt_a.init(params_a), params_a)
+    um, _ = opt_m.update(g, opt_m.init(params_m), params_m)
+    wq_a = np.asarray(ua["blocks"]["wq"], np.float32)
+    wq_m = np.asarray(um["blocks"]["wq"], np.float32)
+    assert np.abs(wq_a - wq_m).max() > 1e-6       # it does something
+    np.testing.assert_allclose(                   # but keeps the magnitude
+        np.linalg.norm(wq_a), np.linalg.norm(wq_m), rtol=0.05)
+
+
+@pytest.mark.parametrize("variant", ["dion2", "adamuon"])
+def test_new_variants_compose_with_bucket_fusion(variant):
+    params, _, opt = _mk(variant, ns=GramNSConfig(num_steps=5,
+                                                  bucket_fusion=True))
+    new_params, state = _run(opt, params, n=2)
+    for leaf in jax.tree.leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
 # ------------------------------------------------------- state round-trips
 
-@pytest.mark.parametrize("variant", ["normuon", "muonbp"])
+@pytest.mark.parametrize("variant", ["normuon", "muonbp", "dion2",
+                                     "adamuon"])
 def test_state_dict_roundtrip_with_variant_state(variant):
     params, _, opt = _mk(variant)
     _, state = _run(opt, params, n=2)
@@ -182,7 +320,8 @@ def test_state_dict_roundtrip_with_variant_state(variant):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.parametrize("variant", ["normuon", "muonbp"])
+@pytest.mark.parametrize("variant", ["normuon", "muonbp", "dion2",
+                                     "adamuon"])
 def test_checkpoint_roundtrip_variant_state(tmp_path, variant):
     """The new per-variant state fields survive the checkpoint manager."""
     from repro.checkpoint.manager import CheckpointManager
